@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,49 @@
+"""Benchmark entrypoint: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. Rounds are reduced by default
+(CPU container); raise --rounds for the full-fidelity sweep."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12,
+                    help="FL rounds per simulation benchmark")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma list: table1,fig3,fig4,fig5,fig7,kernels")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    if want("fig5"):
+        from benchmarks import fig5_shapley
+        fig5_shapley.run()
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        kernels_bench.run()
+    if want("fig3"):
+        from benchmarks import fig3_cost
+        fig3_cost.run(rounds=args.rounds)
+    if want("table1"):
+        from benchmarks import table1_attacks
+        table1_attacks.run(rounds=args.rounds)
+    if want("fig4"):
+        from benchmarks import fig4_robustness
+        fig4_robustness.run(rounds=args.rounds)
+    if want("fig7"):
+        from benchmarks import fig7_lambda_table2
+        fig7_lambda_table2.run(rounds=args.rounds)
+
+    print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Byzantine-defense grid (Table I at reduced scale): all five methods x
+all four attacks on the synthetic CIFAR-10 surrogate.
+
+Run:  PYTHONPATH=src python examples/byzantine_defense.py [--rounds 8]
+"""
+import argparse
+
+from repro.configs.base import FLConfig
+from repro.federated import compare_methods
+
+METHODS = ["fedavg", "krum", "trimmed_mean", "fltrust", "cost_trustfl"]
+ATTACKS = ["none", "label_flip", "gaussian", "sign_flip", "scaling"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+
+    table = {}
+    for attack in ATTACKS:
+        fl = FLConfig(attack=attack, malicious_frac=0.3, n_clouds=3,
+                      clients_per_cloud=6, clients_per_round=9,
+                      local_epochs=1, local_batch=16, ref_samples=32)
+        runs = compare_methods(fl, METHODS, rounds=args.rounds)
+        for m, r in runs.items():
+            table[(m, attack)] = r.final_accuracy
+
+    header = f"{'method':14s}" + "".join(f"{a:>12s}" for a in ATTACKS)
+    print("\nTest accuracy (reduced-scale reproduction of Table I)")
+    print(header)
+    print("-" * len(header))
+    for m in METHODS:
+        row = f"{m:14s}" + "".join(f"{table[(m, a)]:12.4f}" for a in ATTACKS)
+        print(row)
+    print("\npaper (200 rounds, real CIFAR-10):")
+    print("FedAvg 89.1/68.3/54.5/41.2/32.8 | Ours 91.2/86.7/87.8/85.5/84.1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched serving demo: KV-cache decode with any assigned architecture
+(reduced config on CPU). Greedy-decodes a batch of prompts and reports
+tokens/s + per-family cache footprint.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-1.6b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS
+from repro.models import build_model
+from repro.models import transformer as tfm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    m = build_model(args.arch, smoke=True)
+    cfg = m.cfg
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    max_len = args.prompt_len + args.gen
+
+    batch = m.dummy_batch(key, batch=args.batch, seq=args.prompt_len)
+    print(f"arch={args.arch} (reduced) batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+
+    t0 = time.time()
+    logits, cache = m.prefill(params, batch, max_len=max_len)
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(cache))
+    print(f"prefill: {time.time()-t0:.2f}s | cache {cache_bytes/1e6:.2f}MB "
+          f"({'O(1) state' if cfg.family == 'ssm' else 'KV'})")
+
+    step = jax.jit(lambda p, c, t, i: tfm.decode_step(p, cfg, c, t, i))
+    tok = jnp.argmax(logits, axis=-1)
+    out = [np.array(tok)]
+    t0 = time.time()
+    for i in range(args.gen):
+        logits, cache = step(params, cache,
+                             tok, jnp.asarray(args.prompt_len + i))
+        tok = jnp.argmax(logits, axis=-1)
+        out.append(np.array(tok))
+    dt = time.time() - t0
+    toks = args.gen * args.batch
+    print(f"decode: {toks} tokens in {dt:.2f}s -> {toks/dt:.1f} tok/s")
+    gen = np.stack(out, axis=1)
+    print("sample token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Flat-npz checkpointing with JSON metadata (step, config, reputation
+state). Pytrees are flattened with '/'-joined key paths; restore rebuilds
+into a provided template tree (shape/dtype validated)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0,
+                    metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    meta = {"step": step, "n_arrays": len(flat)}
+    meta.update(metadata or {})
+    with open(os.path.join(path, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def restore_checkpoint(path: str, template: Any
+                       ) -> Tuple[Any, Dict[str, Any]]:
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        flat = {k: npz[k] for k in npz.files}
+    with open(os.path.join(path, "metadata.json")) as f:
+        meta = json.load(f)
+
+    leaves_tpl, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_k, leaf in leaves_tpl:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, meta

@@ -1,0 +1,64 @@
+"""Architecture + shape config registry.
+
+Importing this package registers all assigned architectures.
+"""
+from repro.configs.base import (
+    FLConfig,
+    ModelConfig,
+    SHAPES,
+    ShapeConfig,
+    get_arch,
+    list_arches,
+    reduced,
+    register_arch,
+)
+
+# Importing registers each arch (side effect).
+from repro.configs import (  # noqa: F401
+    recurrentgemma_2b,
+    gemma2_2b,
+    paligemma_3b,
+    llama4_maverick_400b_a17b,
+    mixtral_8x7b,
+    whisper_small,
+    h2o_danube_3_4b,
+    rwkv6_1_6b,
+    mistral_large_123b,
+    granite_3_8b,
+)
+
+ALL_ARCH_MODULES = (
+    recurrentgemma_2b,
+    gemma2_2b,
+    paligemma_3b,
+    llama4_maverick_400b_a17b,
+    mixtral_8x7b,
+    whisper_small,
+    h2o_danube_3_4b,
+    rwkv6_1_6b,
+    mistral_large_123b,
+    granite_3_8b,
+)
+
+ARCH_IDS = tuple(m.CONFIG.name for m in ALL_ARCH_MODULES)
+
+# long_500k applicability (DESIGN.md §4.1): pure full-attention archs and
+# the bounded-context enc-dec are skipped.
+LONG_CONTEXT_SKIP = frozenset({
+    "mistral-large-123b",
+    "granite-3-8b",
+    "paligemma-3b",
+    "whisper-small",
+})
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in LONG_CONTEXT_SKIP:
+        return False
+    return True
+
+__all__ = [
+    "FLConfig", "ModelConfig", "SHAPES", "ShapeConfig", "get_arch",
+    "list_arches", "reduced", "register_arch", "ARCH_IDS",
+    "LONG_CONTEXT_SKIP", "shape_applicable",
+]

@@ -1,0 +1,38 @@
+"""Cost-TrustFL core: the paper's contribution as composable JAX modules.
+
+Eq. 1–3  -> repro.core.cost
+Eq. 7    -> repro.core.shapley
+Eq. 8–9  -> repro.core.reputation
+Eq. 10   -> repro.core.selection
+Eq. 11–13-> repro.core.trust
+Alg. 1   -> repro.core.aggregation (matrix form) /
+            repro.train.steps (distributed form) /
+            repro.federated.simulation (explicit-client form)
+"""
+from repro.core.aggregation import AggregationResult, cost_trustfl_aggregate
+from repro.core.attacks import (ATTACKS, apply_update_attack, flip_labels,
+                                gaussian_attack, scaling_attack,
+                                sign_flip_attack)
+from repro.core.cost import CostModel
+from repro.core.fl_types import CloudTopology, RoundMetrics
+from repro.core.reputation import ReputationState, ema_update, normalize_scores
+from repro.core.robust import (AGGREGATORS, coordinate_median, fedavg, fltrust,
+                               krum, trimmed_mean)
+from repro.core.selection import select_clients, select_clients_jax
+from repro.core.shapley import (cosine_utility, exact_shapley,
+                                gradient_contribution, monte_carlo_shapley)
+from repro.core.trust import (cloud_trust, normalize_updates, trust_scores,
+                              trusted_aggregate, tree_cos, tree_dot, tree_norm,
+                              tree_scale)
+
+__all__ = [
+    "AggregationResult", "cost_trustfl_aggregate", "ATTACKS",
+    "apply_update_attack", "flip_labels", "gaussian_attack", "scaling_attack",
+    "sign_flip_attack", "CostModel", "CloudTopology", "RoundMetrics",
+    "ReputationState", "ema_update", "normalize_scores", "AGGREGATORS",
+    "coordinate_median", "fedavg", "fltrust", "krum", "trimmed_mean",
+    "select_clients", "select_clients_jax", "cosine_utility", "exact_shapley",
+    "gradient_contribution", "monte_carlo_shapley", "cloud_trust",
+    "normalize_updates", "trust_scores", "trusted_aggregate", "tree_cos",
+    "tree_dot", "tree_norm", "tree_scale",
+]

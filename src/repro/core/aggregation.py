@@ -1,0 +1,87 @@
+"""Cost-TrustFL hierarchical aggregation (Algorithm 1, lines 3–17) on
+explicit (N, D) update matrices — the simulation-scale reference
+implementation that the distributed train step mirrors with collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reputation import ReputationState, ema_update, normalize_scores
+from repro.core.shapley import gradient_contribution
+from repro.core.trust import (cloud_trust, normalize_updates, trust_scores,
+                              trusted_aggregate)
+
+Array = jax.Array
+
+
+class AggregationResult(NamedTuple):
+    update: Array            # (D,) global update (Eq. 6 inner sum)
+    reputation: ReputationState
+    trust: Array             # (N,) TS_i
+    phi: Array               # (N,) raw contribution scores
+    beta: Array              # (K,) cloud trust
+
+
+def cost_trustfl_aggregate(
+    updates: Array,                 # (N, D) full client updates
+    last_layer: Array,              # (N, L) last-layer slices (Eq. 7 input)
+    ref_updates: Array,             # (K, D) per-cloud reference updates
+    ref_last_layer: Array,          # (K, L)
+    cloud_of: Array,                # (N,) int cloud assignment
+    selected: Array,                # (N,) bool participation mask
+    rep_state: ReputationState,
+    *,
+    gamma: float = 0.9,
+    eps: float = 1e-12,
+) -> AggregationResult:
+    """Full Eq. 5–13 pipeline with a two-level (intra-cloud, cross-cloud)
+    hierarchy. Non-selected clients are masked out of every sum."""
+    n, d = updates.shape
+    k = ref_updates.shape[0]
+    selected = selected.astype(updates.dtype)                      # (N,)
+
+    # --- Eq. 7: contribution vs. the mean of *selected* last-layer grads
+    sel_sum = jnp.sum(selected)
+    gbar = (selected @ last_layer) / jnp.maximum(sel_sum, 1.0)
+    phi = gradient_contribution(last_layer, gbar) * selected
+
+    # --- Eq. 8–9
+    r = normalize_scores(phi)
+    new_rep = ema_update(rep_state, r, gamma, participated=selected > 0)
+
+    # --- Eq. 11: trust vs. the client's own cloud reference
+    ts = jnp.zeros((n,), updates.dtype)
+    onehot = jax.nn.one_hot(cloud_of, k, dtype=updates.dtype)      # (N, K)
+    ref_ll_per_client = onehot @ ref_last_layer                    # (N, L)
+    g = last_layer
+    dots = jnp.sum(g * ref_ll_per_client, axis=1)
+    cos = dots / jnp.maximum(
+        jnp.linalg.norm(g, axis=1) * jnp.linalg.norm(ref_ll_per_client, axis=1),
+        eps)
+    ts = jax.nn.relu(cos) * new_rep.ema * selected
+
+    # --- Eq. 12: rescale to own-cloud reference norm
+    ref_norms = jnp.linalg.norm(ref_updates, axis=1)               # (K,)
+    ref_norm_per_client = onehot @ ref_norms
+    client_norms = jnp.linalg.norm(updates, axis=1)
+    g_tilde = updates * (ref_norm_per_client /
+                         jnp.maximum(client_norms, eps))[:, None]
+
+    # --- Eq. 13 per cloud (intra-cloud phase, Eq. 5)
+    ts_cloud = onehot.T @ ts                                        # (K,)
+    weighted = g_tilde * ts[:, None]
+    cloud_aggs = onehot.T @ weighted / jnp.maximum(ts_cloud, eps)[:, None]
+    # empty/zero-trust clouds fall back to their reference update
+    cloud_aggs = jnp.where((ts_cloud > eps)[:, None], cloud_aggs, ref_updates)
+
+    # --- Eq. 6: cross-cloud phase with β_k from global reference direction
+    global_ref = jnp.mean(ref_updates, axis=0)
+    beta = cloud_trust(cloud_aggs, global_ref)
+    update = beta @ cloud_aggs
+
+    return AggregationResult(update=update, reputation=new_rep, trust=ts,
+                             phi=phi, beta=beta)

@@ -1,0 +1,58 @@
+"""Poisoning attacks from the paper's threat model (§III-B, §V-A):
+label flipping (data-level), Gaussian noise, sign flipping, and scaling
+(update-level). Update-level attacks are jittable transforms of the
+malicious rows of an (N, D) update matrix.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flip_labels(labels: Array, n_classes: int, mask: Array, key: Array) -> Array:
+    """Label flipping: randomly permute labels of poisoned examples.
+    ``mask`` is a boolean per-example poison mask."""
+    offset = jax.random.randint(key, labels.shape, 1, n_classes)
+    flipped = (labels + offset) % n_classes
+    return jnp.where(mask, flipped, labels)
+
+
+def gaussian_attack(updates: Array, malicious: Array, key: Array,
+                    sigma: float = 1.0) -> Array:
+    """g_i += N(0, σ²) for malicious rows."""
+    noise = sigma * jax.random.normal(key, updates.shape, updates.dtype)
+    m = malicious.reshape((-1,) + (1,) * (updates.ndim - 1))
+    return jnp.where(m, updates + noise, updates)
+
+
+def sign_flip_attack(updates: Array, malicious: Array, scale: float = 1.0) -> Array:
+    """g_i ← −scale · g_i for malicious rows."""
+    m = malicious.reshape((-1,) + (1,) * (updates.ndim - 1))
+    return jnp.where(m, -scale * updates, updates)
+
+
+def scaling_attack(updates: Array, malicious: Array, scale: float = 10.0) -> Array:
+    """g_i ← scale · g_i (model-replacement style amplification)."""
+    m = malicious.reshape((-1,) + (1,) * (updates.ndim - 1))
+    return jnp.where(m, scale * updates, updates)
+
+
+def apply_update_attack(name: str, updates: Array, malicious: Array,
+                        key: Array, *, sigma: float = 1.0,
+                        scale: float = 10.0) -> Array:
+    if name in ("none", "label_flip"):   # label_flip happens at data level
+        return updates
+    if name == "gaussian":
+        return gaussian_attack(updates, malicious, key, sigma)
+    if name == "sign_flip":
+        return sign_flip_attack(updates, malicious, scale=1.0)
+    if name == "scaling":
+        return scaling_attack(updates, malicious, scale)
+    raise ValueError(f"unknown attack {name!r}")
+
+
+ATTACKS = ("none", "label_flip", "gaussian", "sign_flip", "scaling")

@@ -1,0 +1,78 @@
+"""Communication cost model (paper §III-C, Eq. 1–3).
+
+Costs are expressed in $ per round for a model of ``d`` parameters at
+``bytes_per_param`` (default fp32 upload, matching the paper's setup).
+Prices are $/GB; AWS-style egress defaults are in FLConfig.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.fl_types import CloudTopology
+
+_GB = 1024.0 ** 3
+
+
+@dataclass(frozen=True)
+class CostModel:
+    c_intra: float = 0.01     # $/GB within a cloud
+    c_cross: float = 0.09     # $/GB cross-cloud egress
+    bytes_per_param: int = 4
+
+    def client_unit_costs(self, topo: CloudTopology) -> np.ndarray:
+        """c_i (Eq. 2): per-GB price for client i to reach the global
+        aggregator's cloud (the FLAT upload path)."""
+        same = topo.cloud_of == topo.aggregator_cloud
+        return np.where(same, self.c_intra, self.c_cross)
+
+    def hierarchical_unit_costs(self, topo: CloudTopology) -> np.ndarray:
+        """Marginal per-client cost under HIERARCHICAL aggregation: every
+        client uploads intra-cloud to its edge aggregator; the single
+        cross-cloud edge->global upload is amortized over the cloud's
+        clients. This is the c_i that Eq. 10 sees inside Cost-TrustFL
+        itself — near-uniform, so selection stays reputation-driven and
+        clouds are not starved (the cost saving comes from the hierarchy,
+        not from abandoning remote clouds)."""
+        out = np.full(topo.n_clients, self.c_intra, np.float64)
+        for k in range(topo.n_clouds):
+            ix = topo.clients_in(k)
+            edge_price = (self.c_intra if k == topo.aggregator_cloud
+                          else self.c_cross)
+            out[ix] += edge_price / max(len(ix), 1)
+        return out
+
+    def round_cost(self, topo: CloudTopology, selected: np.ndarray,
+                   d_params: int, hierarchical: bool = True) -> float:
+        """$ cost of one round (Eq. 1 flat, or the hierarchical variant).
+
+        ``selected``: boolean (N,) participation mask.
+        Hierarchical (Eq. 3 structure): every selected client uploads
+        intra-cloud to its edge aggregator; each cloud with >=1 selected
+        client sends ONE cross-cloud aggregate (clouds co-located with the
+        global aggregator pay intra).
+        """
+        gb = d_params * self.bytes_per_param / _GB
+        sel = np.asarray(selected, bool)
+        if not hierarchical:
+            c = self.client_unit_costs(topo)
+            return float(gb * c[sel].sum())
+        cost = gb * self.c_intra * sel.sum()          # client -> edge
+        for k in range(topo.n_clouds):
+            if sel[topo.clients_in(k)].any():
+                price = self.c_intra if k == topo.aggregator_cloud else self.c_cross
+                cost += gb * price                     # edge -> global
+        return float(cost)
+
+    def full_participation_cost(self, topo: CloudTopology, d_params: int) -> float:
+        """Eq. 3 upper bound: Σ_k n_k·d·C_intra + K·d·C_cross."""
+        gb = d_params * self.bytes_per_param / _GB
+        return float(gb * self.c_intra * topo.n_clients +
+                     gb * self.c_cross * topo.n_clouds)
+
+    def collective_egress_dollars(self, cross_pod_bytes: int) -> float:
+        """Price measured cross-pod collective traffic (from the compiled
+        HLO, see repro.roofline) at the egress rate — the TPU-mapping of
+        the paper's cross-cloud fee."""
+        return cross_pod_bytes / _GB * self.c_cross

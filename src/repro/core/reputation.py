@@ -1,0 +1,41 @@
+"""Reputation normalization + EMA smoothing (Eq. 8–9)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ReputationState(NamedTuple):
+    """Persistent per-client reputation r̂ (Eq. 9). ``ema`` has shape (N,)."""
+    ema: Array
+
+    @staticmethod
+    def init(n_clients: int, dtype=jnp.float32) -> "ReputationState":
+        # Algorithm 1 line 1: r̂_i^(0) = 1/N
+        return ReputationState(ema=jnp.full((n_clients,), 1.0 / n_clients, dtype))
+
+
+def normalize_scores(phi: Array, eps: float = 1e-12) -> Array:
+    """Eq. 8: r_i = φ_i / Σ_j φ_j (uniform if all-zero)."""
+    total = jnp.sum(phi)
+    n = phi.shape[0]
+    uniform = jnp.full_like(phi, 1.0 / n)
+    return jnp.where(total > eps, phi / jnp.maximum(total, eps), uniform)
+
+
+def ema_update(state: ReputationState, r: Array, gamma: float,
+               participated: Array | None = None) -> ReputationState:
+    """Eq. 9: r̂^(t) = γ·r̂^(t-1) + (1-γ)·r^(t).
+
+    ``participated`` (bool (N,)) restricts the update to clients that were
+    selected this round — non-participants keep their previous reputation
+    (the paper updates only scored clients; unscored φ would be 0).
+    """
+    new = gamma * state.ema + (1.0 - gamma) * r
+    if participated is not None:
+        new = jnp.where(participated, new, state.ema)
+    return ReputationState(ema=new)

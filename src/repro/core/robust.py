@@ -1,0 +1,81 @@
+"""Byzantine-robust aggregation baselines the paper compares against:
+FedAvg [1], Krum / Multi-Krum [6], coordinate-wise Trimmed-Mean and
+Median [7], and FLTrust [8]. All take an (N, D) update matrix (rows =
+clients) and return a (D,) aggregate; jittable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fedavg(updates: Array, weights: Array | None = None) -> Array:
+    """Weighted mean (weights default to uniform; the paper weights by
+    |D_i|/|D| — pass data sizes as ``weights``)."""
+    g = updates.reshape(updates.shape[0], -1)
+    if weights is None:
+        out = jnp.mean(g, axis=0)
+    else:
+        w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+        out = w @ g
+    return out.reshape(updates.shape[1:])
+
+
+def krum(updates: Array, n_malicious: int, multi: int = 1) -> Array:
+    """(Multi-)Krum: score_i = Σ of squared distances to the n−f−2 nearest
+    neighbours; select the ``multi`` lowest-scoring updates and average."""
+    g = updates.reshape(updates.shape[0], -1)
+    n = g.shape[0]
+    sq = jnp.sum(g * g, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (g @ g.T)          # (N, N)
+    d2 = d2 + jnp.eye(n) * 1e30                               # exclude self
+    k = max(1, n - n_malicious - 2)
+    nearest = -jax.lax.top_k(-d2, k)[0]                       # k smallest per row
+    scores = jnp.sum(nearest, axis=1)
+    _, sel = jax.lax.top_k(-scores, max(1, multi))
+    return jnp.mean(g[sel], axis=0).reshape(updates.shape[1:])
+
+
+def trimmed_mean(updates: Array, trim_frac: float = 0.1) -> Array:
+    """Coordinate-wise trimmed mean: drop the ``trim`` largest and smallest
+    values per coordinate."""
+    g = updates.reshape(updates.shape[0], -1)
+    n = g.shape[0]
+    trim = int(n * trim_frac)
+    s = jnp.sort(g, axis=0)
+    kept = s[trim:n - trim] if trim > 0 else s
+    return jnp.mean(kept, axis=0).reshape(updates.shape[1:])
+
+
+def coordinate_median(updates: Array) -> Array:
+    g = updates.reshape(updates.shape[0], -1)
+    return jnp.median(g, axis=0).reshape(updates.shape[1:])
+
+
+def fltrust(updates: Array, ref_update: Array, eps: float = 1e-12) -> Array:
+    """FLTrust [8]: TS_i = ReLU(cos(g_i, g_ref)); updates rescaled to the
+    reference norm; trust-weighted average. (Cost-TrustFL extends this
+    with the reputation factor — see repro.core.trust.)"""
+    g = updates.reshape(updates.shape[0], -1)
+    ref = ref_update.reshape(-1)
+    refn = jnp.linalg.norm(ref)
+    norms = jnp.linalg.norm(g, axis=1)
+    cos = (g @ ref) / jnp.maximum(norms * refn, eps)
+    ts = jax.nn.relu(cos)
+    g_tilde = g * (refn / jnp.maximum(norms, eps))[:, None]
+    out = (ts @ g_tilde) / jnp.maximum(jnp.sum(ts), eps)
+    return out.reshape(updates.shape[1:])
+
+
+AGGREGATORS = {
+    "fedavg": lambda u, ctx: fedavg(u, ctx.get("weights")),
+    "krum": lambda u, ctx: krum(u, ctx.get("n_malicious", 0),
+                                ctx.get("multi", 1)),
+    "trimmed_mean": lambda u, ctx: trimmed_mean(u, ctx.get("trim_frac", 0.1)),
+    "median": lambda u, ctx: coordinate_median(u),
+    "fltrust": lambda u, ctx: fltrust(u, ctx["ref_update"]),
+}

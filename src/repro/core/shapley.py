@@ -1,0 +1,102 @@
+"""Shapley-value contribution evaluation (paper §IV-B, Fig. 5).
+
+Three estimators:
+
+* ``gradient_contribution`` — the paper's O(N) lightweight score (Eq. 7):
+  ``φ_i = ReLU(cos(g_i^(L), ḡ^(L))) · ‖g_i^(L)‖₂`` over last-layer grads.
+* ``exact_shapley`` — O(2^N) enumeration for ground truth on tiny N.
+* ``monte_carlo_shapley`` — permutation-sampling baseline (Data Shapley).
+
+The latter two exist to reproduce Fig. 5 (time + Pearson correlation) and
+to validate the approximation in tests.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _flat(g: Array) -> Array:
+    return g.reshape(g.shape[0], -1) if g.ndim > 1 else g[:, None]
+
+
+def gradient_contribution(last_layer_grads: Array,
+                          mean_grad: Optional[Array] = None,
+                          eps: float = 1e-12) -> Array:
+    """Eq. 7: φ_i = ReLU(cos(g_i, ḡ)) · ‖g_i‖₂.
+
+    Args:
+      last_layer_grads: (N, D) per-client last-layer gradients (flattened).
+      mean_grad: optional (D,) ḡ; defaults to the mean over clients.
+    Returns: (N,) non-negative contribution scores.
+    """
+    g = _flat(last_layer_grads)
+    gbar = jnp.mean(g, axis=0) if mean_grad is None else mean_grad.reshape(-1)
+    dots = g @ gbar                                  # (N,)
+    norms = jnp.linalg.norm(g, axis=1)               # (N,)
+    nbar = jnp.linalg.norm(gbar)
+    cos = dots / jnp.maximum(norms * nbar, eps)
+    return jax.nn.relu(cos) * norms
+
+
+def exact_shapley(utility: Callable[[np.ndarray], float], n: int) -> np.ndarray:
+    """Exact Shapley values by subset enumeration. ``utility`` maps a
+    boolean mask (n,) -> scalar coalition utility. O(2^n) — tiny n only."""
+    assert n <= 16, "exact enumeration is exponential; use n<=16"
+    phi = np.zeros(n)
+    fact = math.factorial
+    denom = fact(n)
+    # cache utilities per subset bitmask
+    util = {}
+    for bits in range(1 << n):
+        mask = np.array([(bits >> j) & 1 for j in range(n)], bool)
+        util[bits] = float(utility(mask))
+    for i in range(n):
+        for bits in range(1 << n):
+            if (bits >> i) & 1:
+                continue
+            s = bin(bits).count("1")
+            w = fact(s) * fact(n - s - 1) / denom
+            phi[i] += w * (util[bits | (1 << i)] - util[bits])
+    return phi
+
+
+def monte_carlo_shapley(utility: Callable[[np.ndarray], float], n: int,
+                        n_perms: int = 200, seed: int = 0) -> np.ndarray:
+    """Permutation-sampling Shapley (Ghorbani & Zou 2019)."""
+    rng = np.random.default_rng(seed)
+    phi = np.zeros(n)
+    for _ in range(n_perms):
+        perm = rng.permutation(n)
+        mask = np.zeros(n, bool)
+        prev = float(utility(mask))
+        for i in perm:
+            mask[i] = True
+            cur = float(utility(mask))
+            phi[i] += cur - prev
+            prev = cur
+    return phi / n_perms
+
+
+def cosine_utility(last_layer_grads: np.ndarray,
+                   reference: np.ndarray) -> Callable[[np.ndarray], float]:
+    """Coalition utility used for validation: alignment of the coalition's
+    mean gradient with a reference direction (a standard proxy for the
+    coalition's marginal loss improvement under one SGD step)."""
+    g = np.asarray(last_layer_grads, np.float64).reshape(last_layer_grads.shape[0], -1)
+    ref = np.asarray(reference, np.float64).reshape(-1)
+    refn = np.linalg.norm(ref) + 1e-12
+
+    def utility(mask: np.ndarray) -> float:
+        if not mask.any():
+            return 0.0
+        gm = g[mask].mean(axis=0)
+        return float(gm @ ref) / refn
+    return utility

@@ -1,0 +1,74 @@
+"""FLTrust-style Byzantine-robust trust scoring + aggregation (Eq. 11–13).
+
+Operates on flattened gradient matrices; the production train step calls
+the same functions on pytrees via the helpers at the bottom.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def trust_scores(last_layer_grads: Array, ref_last_layer: Array,
+                 reputation: Array, eps: float = 1e-12) -> Array:
+    """Eq. 11: TS_i = ReLU(cos(g_i^(L), g_ref^(L))) · r̂_i."""
+    g = last_layer_grads.reshape(last_layer_grads.shape[0], -1)
+    ref = ref_last_layer.reshape(-1)
+    dots = g @ ref
+    cos = dots / jnp.maximum(jnp.linalg.norm(g, axis=1) * jnp.linalg.norm(ref), eps)
+    return jax.nn.relu(cos) * reputation
+
+
+def normalize_updates(grads: Array, ref_grad: Array, eps: float = 1e-12) -> Array:
+    """Eq. 12: g̃_i = (‖g_ref‖₂ / ‖g_i‖₂) · g_i  (rows of (N, D))."""
+    g = grads.reshape(grads.shape[0], -1)
+    norms = jnp.linalg.norm(g, axis=1, keepdims=True)
+    refn = jnp.linalg.norm(ref_grad.reshape(-1))
+    return (g * (refn / jnp.maximum(norms, eps))).reshape(grads.shape)
+
+
+def trusted_aggregate(grads: Array, ts: Array, eps: float = 1e-12) -> Array:
+    """Eq. 13: Σ TS_i·g̃_i / Σ TS_i (g̃ already normalized)."""
+    g = grads.reshape(grads.shape[0], -1)
+    w = ts / jnp.maximum(jnp.sum(ts), eps)
+    return (w @ g).reshape(grads.shape[1:])
+
+
+def cloud_trust(cloud_grads: Array, global_ref: Array, eps: float = 1e-12) -> Array:
+    """β_k (Eq. 6 / Algorithm 1 line 16): cloud-level trust from the cosine
+    of each cloud aggregate against the global reference direction,
+    ReLU'd and normalized to sum 1."""
+    g = cloud_grads.reshape(cloud_grads.shape[0], -1)
+    ref = global_ref.reshape(-1)
+    cos = (g @ ref) / jnp.maximum(
+        jnp.linalg.norm(g, axis=1) * jnp.linalg.norm(ref), eps)
+    beta = jax.nn.relu(cos)
+    total = jnp.sum(beta)
+    k = g.shape[0]
+    return jnp.where(total > eps, beta / jnp.maximum(total, eps),
+                     jnp.full((k,), 1.0 / k, g.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers (used by the distributed train step)
+
+def tree_dot(a, b) -> Array:
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) *
+                                               y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_norm(t) -> Array:
+    return jnp.sqrt(jnp.maximum(tree_dot(t, t), 0.0))
+
+
+def tree_cos(a, b, eps: float = 1e-12) -> Array:
+    return tree_dot(a, b) / jnp.maximum(tree_norm(a) * tree_norm(b), eps)
+
+
+def tree_scale(t, s):
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), t)

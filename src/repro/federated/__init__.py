@@ -1,0 +1,10 @@
+from repro.federated.client import (accuracy, cnn_apply, cnn_init,
+                                    local_train, xent_loss)
+from repro.federated.server import FLServer
+from repro.federated.simulation import (SimResult, compare_methods,
+                                        make_data, make_topology,
+                                        run_simulation)
+
+__all__ = ["accuracy", "cnn_apply", "cnn_init", "local_train", "xent_loss",
+           "FLServer", "SimResult", "compare_methods", "make_data",
+           "make_topology", "run_simulation"]

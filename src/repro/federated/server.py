@@ -1,0 +1,206 @@
+"""Server-side orchestration of Algorithm 1 at simulation scale, plus
+baseline servers (FedAvg / Krum / Trimmed-Mean / Median / FLTrust) sharing
+the same round loop so Table I / Fig. 2-4 comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import FLConfig
+from repro.core import (CloudTopology, CostModel, ReputationState,
+                        apply_update_attack, cost_trustfl_aggregate,
+                        coordinate_median, fedavg, fltrust, krum,
+                        select_clients, trimmed_mean)
+from repro.core.fl_types import RoundMetrics
+from repro.data.pipeline import FederatedData
+from repro.federated import client as client_mod
+
+Array = jax.Array
+
+
+def _ravel_batch(updates_tree) -> Tuple[np.ndarray, Callable]:
+    """Flatten a pytree with leading client axis into (N, D)."""
+    one = jax.tree.map(lambda x: x[0], updates_tree)
+    _, unravel = ravel_pytree(one)
+    flat = jax.vmap(lambda t: ravel_pytree(t)[0])(updates_tree)
+    return flat, unravel
+
+
+def _last_layer_slice(params_template) -> Callable:
+    """Returns fn extracting the flattened last-FC-layer update per client
+    (the paper's g^(L))."""
+    def extract(updates_tree) -> Array:
+        return jax.vmap(
+            lambda t: jnp.concatenate([t["fc2_w"].reshape(-1),
+                                       t["fc2_b"].reshape(-1)]))(updates_tree)
+    return extract
+
+
+@dataclass
+class FLServer:
+    """One server object per method; ``method`` picks the aggregation."""
+    flcfg: FLConfig
+    topo: CloudTopology
+    data: FederatedData
+    method: str = "cost_trustfl"
+    seed: int = 0
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.seed)
+        shape = self.data.client_x.shape[2:]
+        self.params = client_mod.cnn_init(key, shape, self.data.n_classes)
+        self.rep = ReputationState.init(self.topo.n_clients)
+        self.cost_model = CostModel(self.flcfg.c_intra, self.flcfg.c_cross)
+        # Eq. 10 sees the hierarchical marginal cost (see CostModel);
+        # the flat Eq. 2 prices are used for the baselines' accounting
+        self.unit_costs = self.cost_model.hierarchical_unit_costs(self.topo)
+        self.cum_cost = 0.0
+        self.d_params = int(ravel_pytree(self.params)[0].size)
+        rng = np.random.default_rng(self.seed)
+        n_mal = int(self.flcfg.malicious_frac * self.topo.n_clients)
+        self.malicious = np.zeros(self.topo.n_clients, bool)
+        self.malicious[rng.choice(self.topo.n_clients, n_mal,
+                                  replace=False)] = True
+        self._extract_ll = _last_layer_slice(self.params)
+        self._poisoned_y = self._poison_labels()
+        self.history: List[RoundMetrics] = []
+        # jit the hot paths ONCE (re-tracing per round dominates runtime
+        # on CPU otherwise)
+        fl = self.flcfg
+        self._train_selected = jax.jit(jax.vmap(
+            lambda p, x, y, k: client_mod.local_train(
+                p, x, y, k, epochs=fl.local_epochs, batch=fl.local_batch,
+                lr=fl.lr),
+            in_axes=(None, 0, 0, 0)))
+        # reference LocalTrain uses the SAME schedule as clients so the
+        # Eq. 12 rescale preserves the effective server step size
+        self._train_refs = jax.jit(jax.vmap(
+            lambda p, x, y, k: client_mod.local_train(
+                p, x, y, k, epochs=fl.local_epochs, batch=32, lr=fl.lr),
+            in_axes=(None, 0, 0, None)))
+
+    # -- attacks -------------------------------------------------------------
+    def _poison_labels(self) -> np.ndarray:
+        y = np.array(self.data.client_y)
+        if self.flcfg.attack != "label_flip":
+            return y
+        rng = np.random.default_rng(self.seed + 1)
+        nc = self.data.n_classes
+        for i in np.nonzero(self.malicious)[0]:
+            y[i] = (y[i] + rng.integers(1, nc, size=y[i].shape)) % nc
+        return y
+
+    # -- selection ------------------------------------------------------------
+    def _select(self, rng: np.random.Generator) -> np.ndarray:
+        m = self.flcfg.clients_per_round
+        if self.method == "cost_trustfl":
+            # the per-cloud exploration quota is itself part of the λ
+            # trade-off: at high λ the budget concentrates on cheap clouds
+            # (inactive clouds then skip their cross-cloud upload — this
+            # is where Fig. 7's cost knee comes from)
+            quota = 2 if self.flcfg.cost_lambda < 0.75 else 0
+            return select_clients(np.array(self.rep.ema), self.unit_costs, m,
+                                  per_cloud_min=quota,
+                                  cloud_of=self.topo.cloud_of,
+                                  cost_lambda=self.flcfg.cost_lambda, rng=rng)
+        sel = np.zeros(self.topo.n_clients, bool)
+        sel[rng.choice(self.topo.n_clients, m, replace=False)] = True
+        return sel
+
+    # -- reference updates (per-cloud trusted datasets) ------------------------
+    def _reference_updates(self, key: Array) -> Any:
+        return self._train_refs(self.params, jnp.asarray(self.data.ref_x),
+                                jnp.asarray(self.data.ref_y), key)
+
+    # -- one round --------------------------------------------------------------
+    def run_round(self, t: int) -> RoundMetrics:
+        rng = np.random.default_rng(self.seed * 100003 + t)
+        key = jax.random.PRNGKey(self.seed * 7919 + t)
+        sel = self._select(rng)
+        sel_ix = np.nonzero(sel)[0]
+
+        # local training for selected clients (vmap over clients)
+        keys = jax.random.split(key, self.topo.n_clients)
+        upd_tree = self._train_selected(
+            self.params, jnp.asarray(self.data.client_x[sel_ix]),
+            jnp.asarray(self._poisoned_y[sel_ix]), keys[sel_ix])
+
+        flat_sel, unravel = _ravel_batch(upd_tree)
+
+        # update-level attacks on malicious selected clients
+        mal_sel = jnp.asarray(self.malicious[sel_ix])
+        flat_sel = apply_update_attack(
+            self.flcfg.attack, flat_sel, mal_sel, key,
+            sigma=self.flcfg.gaussian_sigma, scale=self.flcfg.attack_scale)
+
+        # scatter to full (N, D) with zeros for non-selected
+        n = self.topo.n_clients
+        flat = jnp.zeros((n, flat_sel.shape[1]), flat_sel.dtype
+                         ).at[jnp.asarray(sel_ix)].set(flat_sel)
+        ll_sel = self._extract_ll(upd_tree)
+        mal3 = mal_sel
+        ll_sel = apply_update_attack(self.flcfg.attack, ll_sel, mal3, key,
+                                     sigma=self.flcfg.gaussian_sigma,
+                                     scale=self.flcfg.attack_scale)
+        ll = jnp.zeros((n, ll_sel.shape[1]), ll_sel.dtype
+                       ).at[jnp.asarray(sel_ix)].set(ll_sel)
+
+        # aggregate
+        update_flat, hierarchical = self._aggregate(flat, ll, key, sel)
+
+        # apply: w <- w - eta * g   (server_lr; g is a model delta)
+        delta = unravel(update_flat * self.flcfg.server_lr)
+        self.params = jax.tree.map(lambda w, g: w - g, self.params, delta)
+
+        # cost accounting (Eq. 1 / Eq. 3 structure)
+        cost = self.cost_model.round_cost(self.topo, sel, self.d_params,
+                                          hierarchical=hierarchical)
+        self.cum_cost += cost
+        metrics = RoundMetrics(round=t, cost=cost, cum_cost=self.cum_cost,
+                               selected=sel,
+                               reputation=np.array(self.rep.ema))
+        self.history.append(metrics)
+        return metrics
+
+    def _aggregate(self, flat: Array, ll: Array, key: Array,
+                   sel: np.ndarray) -> Tuple[Array, bool]:
+        method = self.method
+        sel_j = jnp.asarray(sel)
+        if method == "cost_trustfl":
+            ref_tree = self._reference_updates(key)
+            ref_flat, _ = _ravel_batch(ref_tree)
+            ref_ll = self._extract_ll(ref_tree)
+            res = cost_trustfl_aggregate(
+                flat, ll, ref_flat, ref_ll,
+                jnp.asarray(self.topo.cloud_of), sel_j, self.rep,
+                gamma=self.flcfg.ema_gamma)
+            self.rep = res.reputation
+            return res.update, True
+        sel_ix = jnp.nonzero(sel_j, size=int(sel.sum()))[0]
+        u = flat[sel_ix]
+        if method == "fedavg":
+            return fedavg(u), False
+        if method == "krum":
+            f = int(self.flcfg.malicious_frac * u.shape[0])
+            return krum(u, f, multi=max(1, u.shape[0] - f - 2)), False
+        if method == "trimmed_mean":
+            return trimmed_mean(u, trim_frac=self.flcfg.malicious_frac / 2), False
+        if method == "median":
+            return coordinate_median(u), False
+        if method == "fltrust":
+            ref_tree = self._reference_updates(key)
+            ref_flat, _ = _ravel_batch(ref_tree)
+            return fltrust(u, jnp.mean(ref_flat, axis=0)), False
+        raise ValueError(method)
+
+    # -- eval -------------------------------------------------------------------
+    def evaluate(self) -> float:
+        return client_mod.accuracy(self.params,
+                                   jnp.asarray(self.data.test_x),
+                                   jnp.asarray(self.data.test_y))

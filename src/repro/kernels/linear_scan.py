@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: chunked diagonal linear recurrence
+h_t = a_t ⊙ h_{t-1} + b_t (the RG-LRU state update, DESIGN.md §6).
+
+TPU mapping: grid = (B-blocks, T-chunks) with the time axis iterated
+sequentially (TPU grids execute in order, last axis fastest), carrying the
+(BB, D) running state in a VMEM scratch across chunk steps. Within a
+chunk the recurrence runs as an unrolled loop over the chunk's rows —
+each row is a (BB, D) VPU multiply-add, so the sequential depth is
+chunk-length while all batch/feature lanes stay saturated.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(a_blk, b_blk, h_out, carry, *, chunk: int):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        carry[...] = jnp.zeros_like(carry)
+
+    a = a_blk[...].astype(jnp.float32)           # (BB, C, D)
+    b = b_blk[...].astype(jnp.float32)
+    h = carry[...]                               # (BB, D)
+    rows = []
+    for t in range(chunk):
+        h = a[:, t] * h + b[:, t]
+        rows.append(h)
+    out = jnp.stack(rows, axis=1)                # (BB, C, D)
+    carry[...] = h
+    h_out[...] = out.astype(h_out.dtype)
+
+
+def linear_scan(a: Array, b: Array, *, chunk: int = 32,
+                block_b: int = 8, interpret: bool = True) -> Array:
+    """h_t = a_t*h_{t-1} + b_t over axis 1. a, b: (B, T, D) -> (B, T, D)."""
+    bsz, t, d = a.shape
+    bb = min(block_b, bsz)
+    c = min(chunk, t)
+    pb = (-bsz) % bb
+    pt = (-t) % c
+    ap = jnp.pad(a, ((0, pb), (0, pt), (0, 0)))
+    bp = jnp.pad(b, ((0, pb), (0, pt), (0, 0)))
+    bt, tt = ap.shape[0], ap.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=c),
+        grid=(bt // bb, tt // c),
+        in_specs=[
+            pl.BlockSpec((bb, c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bb, c, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, c, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, tt, d), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, d), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:bsz, :t]

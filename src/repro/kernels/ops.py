@@ -1,0 +1,43 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; TPU is the
+compilation TARGET). On real TPU hardware pass interpret=False.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan import linear_scan as _linear_scan
+from repro.kernels.trust_score import trust_score as _trust_score
+from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def trust_score(grads: Array, ref: Array, reputation: Array, *,
+                block_n: int = 8, block_d: int = 512,
+                interpret: bool = True) -> Tuple[Array, Array, Array]:
+    """Fused Eq. 7 + Eq. 11 statistics: (phi, ts, norms) over (N, D)."""
+    return _trust_score(grads, ref, reputation, block_n=block_n,
+                        block_d=block_d, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def weighted_agg(grads: Array, ts: Array, norms: Array, ref_norm: Array, *,
+                 block_d: int = 512, interpret: bool = True) -> Array:
+    """Fused Eq. 12 + Eq. 13 aggregation: (N, D) -> (D,)."""
+    return _weighted_agg(grads, ts, norms, ref_norm, block_d=block_d,
+                         interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_b", "interpret"))
+def linear_scan(a: Array, b: Array, *, chunk: int = 32, block_b: int = 8,
+                interpret: bool = True) -> Array:
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + b_t over axis 1."""
+    return _linear_scan(a, b, chunk=chunk, block_b=block_b,
+                        interpret=interpret)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references
+used by tests and by interpret-mode validation)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def trust_score_ref(grads: Array, ref: Array, reputation: Array,
+                    eps: float = 1e-12) -> Tuple[Array, Array, Array]:
+    """Fused Eq. 7 + Eq. 11 statistics over an (N, D) gradient matrix.
+
+    Returns (phi, ts, norms):
+      phi_i = ReLU(cos(g_i, ḡ)) * ||g_i||      (ḡ = mean over clients)
+      ts_i  = ReLU(cos(g_i, ref)) * r̂_i
+      norms_i = ||g_i||
+    """
+    g = grads.astype(jnp.float32)
+    r = ref.astype(jnp.float32)
+    gbar = jnp.mean(g, axis=0)
+    norms = jnp.linalg.norm(g, axis=1)
+    nbar = jnp.linalg.norm(gbar)
+    nref = jnp.linalg.norm(r)
+    cos_bar = (g @ gbar) / jnp.maximum(norms * nbar, eps)
+    cos_ref = (g @ r) / jnp.maximum(norms * nref, eps)
+    phi = jax.nn.relu(cos_bar) * norms
+    ts = jax.nn.relu(cos_ref) * reputation.astype(jnp.float32)
+    return phi, ts, norms
+
+
+def weighted_agg_ref(grads: Array, ts: Array, norms: Array, ref_norm: Array,
+                     eps: float = 1e-12) -> Array:
+    """Fused Eq. 12 + Eq. 13: out = Σ_i TS_i·(‖g_ref‖/‖g_i‖)·g_i / Σ_i TS_i."""
+    g = grads.astype(jnp.float32)
+    w = ts.astype(jnp.float32) * (ref_norm / jnp.maximum(norms, eps))
+    out = (w @ g) / jnp.maximum(jnp.sum(ts), eps)
+    return out
+
+
+def linear_scan_ref(a: Array, b: Array) -> Array:
+    """h_t = a_t ⊙ h_{t-1} + b_t along axis 1 (h_0 = 0). (B, T, D)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

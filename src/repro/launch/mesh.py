@@ -1,0 +1,26 @@
+"""Production mesh construction. A FUNCTION (not a module constant) so
+importing never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 (256 chips) per pod; 2 pods = 512.
+
+    Axes: ``data`` = client cohorts (FL data parallelism), ``model`` =
+    tensor/FSDP parallelism, ``pod`` = cloud boundary (multi-pod only).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, multi_pod: bool = False):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    n = n_devices or len(jax.devices())
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, n // 4, 2), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,90 @@
+"""Production training launcher.
+
+On real hardware this runs the FL train loop for any --arch on the
+production mesh; in this container it is exercised with --debug-mesh
+(host devices) and reduced configs. The dry-run path (launch/dryrun.py)
+covers the full-scale lower/compile story.
+
+  python -m repro.launch.train --arch gemma2-2b --steps 10 --debug-mesh \
+      --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--strategy", default=None,
+                    choices=[None, "two_phase", "fused"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model config (CPU-sized)")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="use host devices instead of the production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--n-clouds", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    import os
+    if args.debug_mesh:
+        os.environ.setdefault("XLA_FLAGS",
+                              "--xla_force_host_platform_device_count=8")
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import SHAPES
+    from repro.configs.base import FLConfig
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train import make_fl_train_step
+
+    mesh = (make_debug_mesh() if args.debug_mesh
+            else make_production_mesh(multi_pod=args.multi_pod))
+    jax.set_mesh(mesh)
+    model = build_model(args.arch, smoke=args.smoke)
+    fl = FLConfig(n_clouds=args.n_clouds, clients_per_round=4)
+    opt = adamw(args.lr)
+    step, topo = make_fl_train_step(model, mesh, fl, opt,
+                                    strategy=args.strategy)
+    print(f"mesh={dict(mesh.shape)} clients={topo.n_clients} "
+          f"clouds={topo.n_clouds} strategy="
+          f"{args.strategy or model.cfg.fl_strategy}")
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt_state = opt[0](params)
+    rep = jnp.full((topo.n_clients,), 1.0 / topo.n_clients)
+    fused = (args.strategy or model.cfg.fl_strategy) == "fused"
+
+    t0 = time.time()
+    for it in range(args.steps):
+        kb, kr, key = jax.random.split(key, 3)
+        batch = model.dummy_batch(kb, batch=args.batch, seq=args.seq)
+        ref = model.dummy_batch(kr, batch=topo.n_clouds * 2, seq=args.seq)
+        ref = jax.tree.map(
+            lambda x: x.reshape((topo.n_clouds, 2) + x.shape[1:]), ref)
+        extra = (jax.random.PRNGKey(it),) if fused else ()
+        params, opt_state, rep, met = step(params, opt_state, rep, batch,
+                                           ref, *extra)
+        print(f"step {it+1:3d} loss={float(met['loss']):.4f} "
+              f"rep={np.array2string(np.array(rep), precision=3)} "
+              f"({(time.time()-t0)/(it+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params, "rep": rep},
+                        step=args.steps, metadata={"arch": args.arch})
+        print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.model import Model, build_model
+from repro.models.frontends import batch_spec, make_batch
+
+__all__ = ["Model", "build_model", "batch_spec", "make_batch"]

@@ -1,0 +1,272 @@
+"""GQA attention: full / sliding-window / chunked, softcap, RoPE,
+q-chunked (flash-style) full-sequence path + position-tagged KV-cache
+decode path that covers all three masking disciplines.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, dense_init, softcap
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def init_attn(key: Array, cfg: ModelConfig, dtype=jnp.float32,
+              cross: bool = False) -> Dict[str, Array]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, h, hd), dtype=dtype),
+        "wk": dense_init(k2, (d, kv, hd), dtype=dtype),
+        "wv": dense_init(k3, (d, kv, hd), dtype=dtype),
+        "wo": dense_init(k4, (h, hd, d), scale=1.0 / math.sqrt(h * hd),
+                         dtype=dtype),
+    }
+
+
+def _qkv(params, xq: Array, xkv: Array, cfg: ModelConfig):
+    q = jnp.einsum("btd,dhk->bthk", xq, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"])
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array,
+          attn_cap: float) -> Array:
+    """q: (B,T,KV,G,hd) k/v: (B,S,KV,hd) mask: broadcastable (B,1,1,T,S).
+    Returns (B,T,KV,G,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k) / math.sqrt(hd)
+    scores = softcap(scores.astype(jnp.float32), attn_cap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgts,bskh->btkgh", p, v)
+
+
+def _band_mask(qpos: Array, kpos: Array, layer_type: str, cfg: ModelConfig,
+               prefix_len: int = 0) -> Array:
+    """(T, S) boolean mask for self-attention given absolute positions."""
+    qp, kp = qpos[:, None], kpos[None, :]
+    causal = kp <= qp
+    if layer_type == "L":
+        m = causal & (kp > qp - cfg.window)
+    elif layer_type == "C":
+        m = causal & (kp // cfg.chunk == qp // cfg.chunk)
+    else:
+        m = causal
+    if prefix_len > 0:
+        bidir = (kp < prefix_len) & (qp < prefix_len)
+        m = m | bidir
+    return m
+
+
+def attn_forward(params, x: Array, *, cfg: ModelConfig, layer_type: str,
+                 positions: Optional[Array] = None, prefix_len: int = 0,
+                 q_chunk: int = 1024) -> Array:
+    """Full-sequence self-attention (train / prefill).
+
+    Scans over query chunks so the score matrix held live is
+    (B, H, q_chunk, S) — flash-style memory footprint without a
+    materialized (T, S) map. For "L"/"C" layers, keys are additionally
+    dynamic-sliced to the reachable band, so compute is O(T·window)
+    rather than O(T²).
+    """
+    b, t, d = x.shape
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    if positions is None:
+        positions = jnp.arange(t)
+    q, k, v = _qkv(params, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(b, t, kvh, g, -1)
+
+    q_chunk = min(q_chunk, t)
+    if t % q_chunk:                       # keep it simple: pad to multiple
+        pad = q_chunk - t % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qpos_all = jnp.concatenate([positions, jnp.full((pad,), -1)])
+    else:
+        pad = 0
+        qpos_all = positions
+    tq = q.shape[1]
+    n_blocks = tq // q_chunk
+
+    # Reachable-key band size for local/chunked layers (static).
+    if layer_type == "L":
+        band = min(t, cfg.window + q_chunk)
+    elif layer_type == "C":
+        band = min(t, ((cfg.chunk + q_chunk - 1) // cfg.chunk) * cfg.chunk)
+    else:
+        band = t
+
+    def block(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos_all, i * q_chunk, q_chunk)
+        if band < t:
+            # slice keys to the band ending at this q block's last position
+            end = jnp.minimum((i + 1) * q_chunk, t)
+            start = jnp.clip(end - band, 0, t - band)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kp = start + jnp.arange(band)
+        else:
+            ki, vi, kp = k, v, positions
+        m = _band_mask(qp, kp, layer_type, cfg, prefix_len)
+        m = m & (qp[:, None] >= 0)
+        # remat the score/softmax block: backward recomputes the
+        # (H, q_chunk, S) score tile instead of saving it — flash-attention
+        # memory profile without the kernel
+        sdpa = jax.checkpoint(
+            lambda q_, k_, v_, m_: _sdpa(q_, k_, v_, m_, cfg.attn_softcap))
+        oi = sdpa(qi, ki, vi, m[None, None, None])
+        return carry, oi
+
+    _, outs = jax.lax.scan(block, 0, jnp.arange(n_blocks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tq, cfg.n_heads, -1)
+    if pad:
+        out = out[:, :t]
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"])
+
+
+def cross_attn_forward(params, x: Array, memory: Array, *,
+                       cfg: ModelConfig) -> Array:
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    b, t, _ = x.shape
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(params, x, memory, cfg)
+    q = q.reshape(b, t, kvh, g, -1)
+    mask = jnp.ones((1, 1, 1, t, memory.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, 0.0).reshape(b, t, cfg.n_heads, -1)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path: position-tagged KV cache valid for full / window / chunk.
+
+def cache_len(cfg: ModelConfig, layer_type: str, max_len: int) -> int:
+    if layer_type == "L":
+        return min(max_len, cfg.window)
+    if layer_type == "C":
+        return min(max_len, cfg.chunk)
+    return max_len
+
+
+def init_attn_cache(cfg: ModelConfig, layer_type: str, batch: int,
+                    max_len: int, dtype=jnp.float32) -> Dict[str, Array]:
+    s = cache_len(cfg, layer_type, max_len)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s, kv, hd), dtype),
+        "v": jnp.zeros((batch, s, kv, hd), dtype),
+        "pos": jnp.full((s,), -1, jnp.int32),   # absolute position per slot
+    }
+
+
+def attn_decode(params, x: Array, cache: Dict[str, Array], index: Array, *,
+                cfg: ModelConfig, layer_type: str
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode. ``index`` is the scalar absolute position of the
+    new token; the cache slot is derived from the layer's masking
+    discipline (full: index, window/chunk: index mod cache length)."""
+    b = x.shape[0]
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    s = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(params, x, x, cfg)
+    pos = jnp.full((1,), 0) + index
+    q = apply_rope(q, pos[None, :], cfg.rope_theta).reshape(b, 1, kvh, g, -1)
+    k_new = apply_rope(k_new, pos[None, :], cfg.rope_theta)
+
+    slot = index % s
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), index, jnp.int32), slot, axis=0)
+
+    if layer_type == "L":
+        lower = index - cfg.window + 1
+    elif layer_type == "C":
+        lower = (index // cfg.chunk) * cfg.chunk
+    else:
+        lower = 0
+    valid = (cpos >= lower) & (cpos <= index) & (cpos >= 0)       # (s,)
+    out = _decode_attn(q, k, v, valid, cfg.attn_softcap)
+    out = out.reshape(b, 1, cfg.n_heads, -1)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, {"k": k, "v": v, "pos": cpos}
+
+
+# One-token scores are (B,H,1,S) — small even at 500k — while chunked
+# dynamic-slices over a sharded cache force SPMD replication. Keep the
+# flash path only for huge UNSHARDED caches (single-host serving).
+_DECODE_CHUNK = 1 << 20
+
+
+def _decode_attn(q: Array, k: Array, v: Array, valid: Array,
+                 attn_cap: float) -> Array:
+    """Flash-style one-token attention over a (possibly huge) cache.
+
+    Scans cache chunks with a running (max, denom, out) triple so the
+    live score tensor is (B, KV, G, 1, chunk) instead of (..., S) —
+    the memory fix for long_500k decode. q: (B,1,KV,G,hd);
+    k/v: (B,S,KV,hd); valid: (S,)."""
+    s = k.shape[1]
+    if s <= _DECODE_CHUNK:
+        return _sdpa(q, k, v, valid[None, None, None, None, :], attn_cap)
+    c = _DECODE_CHUNK
+    n = (s + c - 1) // c
+    pad = n * c - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    b, _, kvh, hd = k.shape
+    g = q.shape[3]
+    hd_scale = 1.0 / math.sqrt(hd)
+
+    def chunk_step(carry, i):
+        m, l, o = carry
+        ki = jax.lax.dynamic_slice_in_dim(k, i * c, c, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, i * c, c, axis=1)
+        vm = jax.lax.dynamic_slice_in_dim(valid, i * c, c)
+        sc = jnp.einsum("btkgh,bskh->bkgts", q, ki) * hd_scale
+        sc = softcap(sc.astype(jnp.float32), attn_cap)
+        sc = jnp.where(vm[None, None, None, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", p.astype(q.dtype), vi).astype(jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, 1), jnp.float32)
+    o0 = jnp.zeros((b, kvh, g, 1, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(chunk_step, (m0, l0, o0), jnp.arange(n))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    # (B,KV,G,1,hd) -> (B,1,KV,G,hd)
+    return jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+
+def init_cross_cache(params, memory: Array, cfg: ModelConfig) -> Dict[str, Array]:
+    """Precompute cross-attention K/V from encoder output."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_attn_decode(params, x: Array, cache: Dict[str, Array], *,
+                      cfg: ModelConfig) -> Array:
+    b = x.shape[0]
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"]).reshape(b, 1, kvh, g, -1)
+    mask = jnp.ones((1, 1, 1, 1, cache["k"].shape[1]), bool)
+    out = _sdpa(q, cache["k"], cache["v"], mask, 0.0).reshape(
+        b, 1, cfg.n_heads, -1)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"])

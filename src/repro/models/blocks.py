@@ -1,0 +1,139 @@
+"""Per-layer block: pre-norm mixer (attention / RG-LRU / RWKV6) +
+pre-norm FFN (dense / MoE / channel-mix), with a unified cache protocol
+for decode. Layer type and MoE-ness are static per call site so the
+transformer can ``lax.scan`` over homogeneous pattern cycles."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_BLOCKS, ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import dense_init, rms_norm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_layer(key: Array, cfg: ModelConfig, layer_type: str, is_moe: bool,
+               dtype=jnp.float32, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"norm1": jnp.zeros((d,), dtype),
+                 "norm2": jnp.zeros((d,), dtype)}
+    if layer_type in ATTN_BLOCKS:
+        p["mixer"] = attn.init_attn(ks[0], cfg, dtype)
+    elif layer_type == "R":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    elif layer_type == "W":
+        p["mixer"] = rwkv_mod.init_rwkv6(ks[0], cfg, dtype)
+    else:
+        raise ValueError(layer_type)
+    if layer_type == "W":
+        p["ffn"] = mlp_mod.init_channel_mix(ks[1], cfg, dtype)
+    elif is_moe:
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = mlp_mod.init_mlp(ks[1], cfg, dtype)
+    if cross:
+        p["norm_x"] = jnp.zeros((d,), dtype)
+        p["cross"] = attn.init_attn(ks[2], cfg, dtype, cross=True)
+    return p
+
+
+def _norm(x: Array, scale: Array, cfg: ModelConfig) -> Array:
+    return rms_norm(x, scale, cfg.norm_eps, gemma_style=True)
+
+
+def layer_forward(p: Params, x: Array, *, cfg: ModelConfig, layer_type: str,
+                  is_moe: bool, positions: Optional[Array] = None,
+                  prefix_len: int = 0, memory: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """Full-sequence layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(x, p["norm1"], cfg)
+    if layer_type in ATTN_BLOCKS:
+        m = attn.attn_forward(p["mixer"], h, cfg=cfg, layer_type=layer_type,
+                              positions=positions, prefix_len=prefix_len)
+    elif layer_type == "R":
+        m = rglru_mod.rglru_forward(p["mixer"], h, cfg)
+    else:
+        m = rwkv_mod.rwkv6_forward(p["mixer"], h, cfg)
+    x = x + m
+    if "cross" in p and memory is not None:
+        hx = _norm(x, p["norm_x"], cfg)
+        x = x + attn.cross_attn_forward(p["cross"], hx, memory, cfg=cfg)
+    h2 = _norm(x, p["norm2"], cfg)
+    if layer_type == "W":
+        f = mlp_mod.channel_mix_forward(p["ffn"], h2)
+    elif is_moe:
+        f, aux = moe_mod.moe_forward(p["ffn"], h2, cfg)
+    else:
+        f = mlp_mod.mlp_forward(p["ffn"], h2, cfg)
+    out = x + f
+    # sequence-parallel residual: the layer-boundary activation (the tensor
+    # the remat/scan machinery saves) lives batch-sharded over the data
+    # axes AND sequence-sharded over `model`; GSPMD inserts the
+    # Megatron-SP all-gather/reduce-scatter pair around attention/FFN.
+    # (with_sharding_constraint is TOTAL: the batch dim must be named or
+    # it is forced-replicated — see EXPERIMENTS.md §Perf iter 8)
+    from repro.sharding.constrain import constrain
+    out = constrain(out, {0: ("pod", "data"), 1: "model"})
+    return out, aux
+
+
+def init_layer_cache(cfg: ModelConfig, layer_type: str, batch: int,
+                     max_len: int, dtype=jnp.float32, cross: bool = False
+                     ) -> Params:
+    c: Params = {}
+    if layer_type in ATTN_BLOCKS:
+        c["attn"] = attn.init_attn_cache(cfg, layer_type, batch, max_len, dtype)
+    elif layer_type == "R":
+        c["rec"] = rglru_mod.init_rglru_state(cfg, batch, dtype)
+    else:
+        c["rec"] = rwkv_mod.init_rwkv6_state(cfg, batch, dtype)
+    if layer_type == "W":
+        c["ffn_prev"] = jnp.zeros((batch, cfg.d_model), dtype)
+    if cross:
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        c["cross"] = {"k": jnp.zeros((batch, cfg.enc_frames, kv, hd), dtype),
+                      "v": jnp.zeros((batch, cfg.enc_frames, kv, hd), dtype)}
+    return c
+
+
+def layer_decode(p: Params, x: Array, cache: Params, index: Array, *,
+                 cfg: ModelConfig, layer_type: str, is_moe: bool
+                 ) -> Tuple[Array, Params]:
+    """Single-token decode. x: (B, 1, D)."""
+    new_cache = dict(cache)
+    h = _norm(x, p["norm1"], cfg)
+    if layer_type in ATTN_BLOCKS:
+        m, new_cache["attn"] = attn.attn_decode(
+            p["mixer"], h, cache["attn"], index, cfg=cfg,
+            layer_type=layer_type)
+    elif layer_type == "R":
+        m, new_cache["rec"] = rglru_mod.rglru_decode(p["mixer"], h,
+                                                     cache["rec"], cfg)
+    else:
+        m, new_cache["rec"] = rwkv_mod.rwkv6_decode(p["mixer"], h,
+                                                    cache["rec"], cfg)
+    x = x + m
+    if "cross" in p:
+        hx = _norm(x, p["norm_x"], cfg)
+        x = x + attn.cross_attn_decode(p["cross"], hx, cache["cross"], cfg=cfg)
+    h2 = _norm(x, p["norm2"], cfg)
+    if layer_type == "W":
+        f = mlp_mod.channel_mix_forward(p["ffn"], h2,
+                                        prev=cache["ffn_prev"])
+        new_cache["ffn_prev"] = h2[:, 0]
+    elif is_moe:
+        f, _ = moe_mod.moe_forward(p["ffn"], h2, cfg)
+    else:
+        f = mlp_mod.mlp_forward(p["ffn"], h2, cfg)
+    return x + f, new_cache

@@ -1,0 +1,135 @@
+"""Shared layers/utilities for the model zoo (pure functional, pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def dense_init(key: Array, shape, scale: Optional[float] = None,
+               dtype=jnp.float32) -> Array:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6,
+             gemma_style: bool = True) -> Array:
+    """RMSNorm in fp32; ``gemma_style`` uses the (1 + w) convention."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    y = y * (1.0 + w) if gemma_style else y * w
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """Gemma-2 soft capping: cap * tanh(x / cap). No-op if cap <= 0."""
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings (length, dim)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  / dim)
+    ang = pos * div
+    out = jnp.zeros((length, dim), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def act_fn(name: str):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+def chunked_cross_entropy(logits_fn, hidden: Array, labels: Array,
+                          mask: Array, *, chunk: int = 512,
+                          logit_softcap_val: float = 0.0) -> Array:
+    """Memory-efficient LM loss: scan over sequence chunks so the
+    (B, S, vocab) logits tensor is never materialized.
+
+    ``logits_fn(h_chunk) -> (B, c, V)``; labels/mask: (B, S).
+    Returns mean NLL over masked positions.
+    """
+    from repro.sharding.constrain import constrain
+    b, s, _ = hidden.shape
+    # gather the sequence-parallel residual once before chunking (the
+    # chunk reshape would otherwise force per-chunk resharding)
+    hidden = constrain(hidden, {0: ("pod", "data")})
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+
+    @jax.checkpoint
+    def chunk_loss(h, y, m):
+        # remat: the backward recomputes this chunk's logits from h (one
+        # matmul) instead of the loss scan saving an f32 (B, c, V)
+        # residual per chunk
+        from repro.sharding.constrain import constrain
+        logits = logits_fn(h)
+        # keep the (B, c, V) chunk vocab-sharded over the model axis and
+        # batch-sharded over the data axes — the single biggest activation
+        logits = constrain(logits, {0: ("pod", "data"), 2: "model"})
+        logits = softcap(logits, logit_softcap_val).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m
+        return jnp.sum(nll)
+
+    if n_chunks > 0:
+        hs = hidden[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, -1)
+        ys = labels[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+        ms = mask[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+
+        def body(tot, xs):
+            h, y, m = xs
+            return tot + chunk_loss(h, y, m), None
+
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ys, 1, 0),
+             jnp.moveaxis(ms, 1, 0)))
+    else:
+        total = jnp.zeros((), jnp.float32)
+    if rem:
+        total = total + chunk_loss(hidden[:, -rem:], labels[:, -rem:],
+                                   mask[:, -rem:])
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    return total / denom

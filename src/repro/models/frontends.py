@@ -1,0 +1,54 @@
+"""Modality frontend STUBS (the one sanctioned carve-out, see DESIGN.md):
+``input_specs`` supplies precomputed patch/frame embeddings of the right
+shape instead of running a ViT/conv-codec. Concrete embedding generators
+exist for the CPU examples/tests."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+Array = jax.Array
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16
+               ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a *training or
+    prefill* batch (no device allocation). Text length shrinks by the
+    vision-prefix so total sequence = shape.seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.vis_tokens if cfg.vis_tokens else s
+    spec: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, text), jnp.float32),
+    }
+    if cfg.vis_tokens:
+        spec["patches"] = jax.ShapeDtypeStruct((b, cfg.vis_tokens,
+                                                cfg.d_model), dtype)
+    if cfg.is_encdec:
+        spec["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_frames,
+                                               cfg.d_model), dtype)
+    return spec
+
+
+def make_batch(key: Array, cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.float32) -> Dict[str, Array]:
+    """Concrete random batch matching ``batch_spec`` (for CPU smoke runs)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    text = seq - cfg.vis_tokens if cfg.vis_tokens else seq
+    tokens = jax.random.randint(k1, (batch, text), 0, cfg.vocab_size)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])],
+                             axis=1)
+    mask = jnp.ones((batch, text), jnp.float32).at[:, -1].set(0.0)
+    out = {"tokens": tokens, "labels": labels, "mask": mask}
+    if cfg.vis_tokens:
+        out["patches"] = 0.02 * jax.random.normal(
+            k2, (batch, cfg.vis_tokens, cfg.d_model), dtype)
+    if cfg.is_encdec:
+        out["frames"] = 0.02 * jax.random.normal(
+            k3, (batch, cfg.enc_frames, cfg.d_model), dtype)
+    return out

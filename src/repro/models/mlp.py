@@ -1,0 +1,60 @@
+"""Dense FFN variants: SwiGLU / GeGLU / plain GELU, plus the RWKV
+channel-mix used by "W" layers."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+
+def init_mlp(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], (d, f), dtype=dtype),
+                "w_up": dense_init(ks[1], (d, f), dtype=dtype),
+                "w_down": dense_init(ks[2], (f, d), dtype=dtype)}
+    return {"w_up": dense_init(ks[0], (d, f), dtype=dtype),
+            "w_down": dense_init(ks[1], (f, d), dtype=dtype)}
+
+
+def mlp_forward(params, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def init_channel_mix(key: Array, cfg: ModelConfig, dtype=jnp.float32
+                     ) -> Dict[str, Array]:
+    """RWKV channel mix: squared-ReLU key path with a receptance gate."""
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {"w_k": dense_init(ks[0], (d, f), dtype=dtype),
+            "w_v": dense_init(ks[1], (f, d), dtype=dtype),
+            "w_r": dense_init(ks[2], (d, d), dtype=dtype),
+            "mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype)}
+
+
+def _token_shift(x: Array, prev: Array | None = None) -> Array:
+    """RWKV token shift: previous timestep's activations (zeros/``prev``
+    for t=0). x: (B, T, D)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def channel_mix_forward(params, x: Array, prev: Array | None = None) -> Array:
+    xs = _token_shift(x, prev)
+    xk = x * params["mu_k"] + xs * (1.0 - params["mu_k"])
+    xr = x * params["mu_r"] + xs * (1.0 - params["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])

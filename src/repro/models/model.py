@@ -1,0 +1,86 @@
+"""Public model API: ``Model(cfg)`` bundles init / loss / decode for any
+assigned architecture. Everything is functional; ``Model`` only carries
+the static config."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_arch, reduced
+from repro.models import transformer as tfm
+from repro.models.frontends import make_batch
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: Array, dtype=jnp.float32) -> Params:
+        return tfm.init_params(key, self.cfg, dtype)
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, Array],
+             loss_chunk: int = 512) -> Tuple[Array, Dict[str, Array]]:
+        return tfm.loss_fn(params, self.cfg, batch, loss_chunk)
+
+    def grad_fn(self, loss_chunk: int = 512):
+        return jax.value_and_grad(
+            lambda p, b: self.loss(p, b, loss_chunk), has_aux=True)
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, params: Params, batch: int, max_len: int,
+                   dtype=jnp.float32, memory: Optional[Array] = None
+                   ) -> Params:
+        return tfm.init_cache(params, self.cfg, batch, max_len, dtype,
+                              memory=memory)
+
+    def encode(self, params: Params, frames: Array) -> Array:
+        return tfm.encode(params, self.cfg, frames)
+
+    def prefill(self, params: Params, batch: Dict[str, Array],
+                max_len: int, cache_dtype=jnp.float32
+                ) -> Tuple[Array, Params]:
+        """Run the full prompt through decode steps to fill a cache.
+        Returns (last logits (B, V), cache). Used by tests/examples at
+        small scale; production prefill lowers the full-sequence forward."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        memory = None
+        if self.cfg.is_encdec:
+            memory = self.encode(params, batch["frames"])
+        cache = self.init_cache(params, b, max_len, cache_dtype,
+                                memory=memory)
+        logits = None
+
+        def body(carry, i):
+            cache, _ = carry
+            logits, cache = tfm.decode_step(params, self.cfg, cache,
+                                            tokens[:, i], i)
+            return (cache, logits), None
+
+        (cache, logits), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((b, self.cfg.vocab_size))),
+            jnp.arange(s))
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Params, token: Array,
+                    index: Array) -> Tuple[Array, Params]:
+        return tfm.decode_step(params, self.cfg, cache, token, index)
+
+    # -- helpers ------------------------------------------------------------
+    def dummy_batch(self, key: Array, batch: int, seq: int) -> Dict[str, Array]:
+        return make_batch(key, self.cfg, batch, seq)
+
+
+def build_model(arch: str, smoke: bool = False) -> Model:
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = reduced(cfg)
+    return Model(cfg)

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded
+gather/scatter dispatch (no (T, E, C) one-hot tensor is ever built).
+
+Dispatch: for every expert, take the top-C tokens by routing weight
+(vmapped ``lax.top_k`` over the expert axis), gather them, run a batched
+(E, C, D) x (E, D, F) einsum, and scatter-add the weighted outputs back.
+Static shapes throughout; experts stack on the leading axis so the expert
+dim shards over the ``model`` mesh axis (expert parallelism) when E
+divides it, falling back to d_ff tensor parallelism otherwise.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+
+def _model_axis_size() -> int:
+    """Size of the ambient mesh's `model` axis (1 if no mesh)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            return int(mesh.shape["model"])
+    except Exception:
+        pass
+    return 1
+
+
+def init_moe(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    glu = cfg.ffn_act in ("swiglu", "geglu")
+    p = {"router": dense_init(ks[0], (d, e), scale=0.02, dtype=dtype),
+         "w_up": dense_init(ks[1], (e, d, f), dtype=dtype),
+         "w_down": dense_init(ks[2], (e, f, d), dtype=dtype)}
+    if glu:
+        p["w_gate"] = dense_init(ks[3], (e, d, f), dtype=dtype)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return min(n_tokens, max(8, cap))
+
+
+def moe_forward(params, x: Array, cfg: ModelConfig
+                ) -> Tuple[Array, Array]:
+    """x: (B, T, D) -> (out, aux_loss). Tokens flattened to N = B*T."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(b * t, d)
+    n = xt.shape[0]
+    cap = moe_capacity(cfg, n)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # per-token-per-expert combined weight (N, E); zero if not routed
+    combine = jnp.zeros((n, e), jnp.float32)
+    combine = jax.vmap(lambda c, idx, p: c.at[idx].add(p))(combine, top_e,
+                                                           top_p)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean((combine > 0).astype(jnp.float32), axis=0)
+    frac_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_prob) * cfg.router_aux_weight
+
+    # capacity selection: per expert, top-C tokens by weight
+    from repro.sharding.constrain import constrain
+    w_e = combine.T                                             # (E, N)
+    gate_ec, idx_ec = jax.lax.top_k(w_e, cap)                   # (E, C)
+    # expert-parallel dispatch: (E, C, D) sharded on experts when E
+    # divides the model axis (llama4: 128), else capacity-sharded over the
+    # data axes (mixtral: 8 experts -> tensor-parallel d_ff inside the
+    # expert). Indices are constrained BEFORE the gather and kept 2-D so
+    # the gather/scatter never materialize an unsharded (E*C, D) tensor
+    # (21 GB/device for mixtral otherwise — EXPERIMENTS.md §Perf).
+    idx_ec = constrain(idx_ec, {0: "model", 1: ("pod", "data")})
+    gate_ec = constrain(gate_ec, {0: "model", 1: ("pod", "data")})
+    x_ec = jnp.take(xt, idx_ec, axis=0)                         # (E, C, D)
+    x_ec = constrain(x_ec, {0: "model", 1: ("pod", "data")})
+
+    if "w_gate" in params:
+        act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", x_ec, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", x_ec, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x_ec, params["w_up"]))
+    if e % _model_axis_size() == 0:
+        h = constrain(h, {0: "model", 1: ("pod", "data")})
+    else:
+        h = constrain(h, {1: ("pod", "data"), 2: "model"})
+    y_ec = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    y_ec = constrain(y_ec, {0: "model", 1: ("pod", "data")})
+    y_ec = y_ec * gate_ec[..., None].astype(y_ec.dtype)
+
+    out = jnp.zeros((n, d), y_ec.dtype).at[idx_ec].add(y_ec)
+    out = constrain(out, {0: ("pod", "data")})
+    return out.reshape(b, t, d), aux

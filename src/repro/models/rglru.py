@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [gate branch: GeLU(W_gate x)] * [recurrent branch:
+W_in x -> causal conv1d(width w) -> RG-LRU] -> W_out.
+
+RG-LRU (per channel):
+  r_t = sigmoid(W_a x_t)            recurrence gate
+  i_t = sigmoid(W_i x_t)            input gate
+  log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence runs as ``jax.lax.associative_scan``
+(TPU-native log-depth parallel scan, see DESIGN.md §2.2); decode is a
+single-step state update. ``repro.kernels.linear_scan`` provides the
+Pallas kernel variant for the same recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    d = cfg.d_model
+    rd = cfg.rg_lru_dim or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a spans ~(0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (rd,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))       # softplus^-1(-log u / c)
+    return {
+        "w_in": dense_init(ks[1], (d, rd), dtype=dtype),
+        "w_gate": dense_init(ks[2], (d, rd), dtype=dtype),
+        "w_out": dense_init(ks[3], (rd, d), dtype=dtype),
+        "w_a": dense_init(ks[4], (rd, rd), scale=0.02, dtype=dtype),
+        "w_i": dense_init(ks[5], (rd, rd), scale=0.02, dtype=dtype),
+        "conv_w": dense_init(ks[6], (cfg.conv1d_width, rd), scale=0.02,
+                             dtype=dtype),
+        "lambda": lam.astype(dtype),
+    }
+
+
+def _causal_conv1d(x: Array, w: Array, state: Array | None = None
+                   ) -> Array:
+    """Depthwise causal conv. x: (B, T, C), w: (W, C).
+    ``state``: (B, W-1, C) trailing context for decode continuity."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : width - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(width))
+    return out
+
+
+def _gates(params, u: Array) -> Tuple[Array, Array]:
+    r = jax.nn.sigmoid(u @ params["w_a"])
+    i = jax.nn.sigmoid(u @ params["w_i"])
+    log_a = -_C * jax.nn.softplus(params["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a).astype(u.dtype)
+    gated = (jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0)) * i * u)
+    return a, gated
+
+
+def rglru_scan(a: Array, b: Array, h0: Array | None = None) -> Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 via associative scan."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(params, x: Array, cfg: ModelConfig,
+                  use_kernel: bool = False) -> Array:
+    """Full-sequence forward. x: (B, T, D)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_in"]
+    u = _causal_conv1d(u, params["conv_w"])
+    a, b = _gates(params, u)
+    if use_kernel:
+        from repro.kernels.ops import linear_scan as pl_scan
+        h = pl_scan(a, b)
+    else:
+        h = rglru_scan(a, b)
+    return (h * gate) @ params["w_out"]
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, Array]:
+    rd = cfg.rg_lru_dim or cfg.d_model
+    return {"h": jnp.zeros((batch, rd), dtype),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, rd), dtype)}
+
+
+def rglru_decode(params, x: Array, state: Dict[str, Array], cfg: ModelConfig
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode. x: (B, 1, D)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_in"]                                   # (B, 1, rd)
+    conv_in = jnp.concatenate([state["conv"], u], axis=1)    # (B, W, rd)
+    w = params["conv_w"]
+    u_c = jnp.einsum("bwc,wc->bc", conv_in, w)[:, None]      # (B, 1, rd)
+    a, b = _gates(params, u_c)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h[:, None] * gate) @ params["w_out"]
+    return y, {"h": h, "conv": conv_in[:, 1:]}

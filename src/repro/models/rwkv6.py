@@ -1,0 +1,132 @@
+"""RWKV-6 "Finch" time-mix (arXiv:2404.05892) with data-dependent decay.
+
+Per head (head_dim n): state S in R^{n x n} accumulating decayed k (x) v
+outer products:
+
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+  o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+with per-channel data-dependent decay
+  w_t = exp(-exp(w0 + tanh(x_t W_w1) W_w2))  in (0, 1)
+
+and token-shift mixing for the r/k/v/w projections. Full-sequence mode
+runs ``lax.scan`` over time carrying S (the HLO loop the dry-run sees);
+decode is the single-step update. This is the chunk-free reference; the
+Pallas ``linear_scan`` kernel accelerates diagonal recurrences
+(RG-LRU); the dense-state RWKV scan stays in XLA.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.models.mlp import _token_shift
+
+Array = jax.Array
+_DECAY_LORA = 64
+
+
+def init_rwkv6(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "w_r": dense_init(ks[0], (d, d), dtype=dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype=dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype=dtype),
+        "w_o": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_decay1": dense_init(ks[4], (d, _DECAY_LORA), scale=0.02, dtype=dtype),
+        "w_decay2": dense_init(ks[5], (_DECAY_LORA, d), scale=0.02, dtype=dtype),
+        "w0": jnp.full((d,), -5.0, dtype),     # exp(-exp(-5)) ~ slow decay
+        "u": dense_init(ks[6], (d,), scale=1.0, dtype=dtype),  # bonus
+        "mu": jnp.full((4, d), 0.5, dtype),    # token-shift mixes (r,k,v,w)
+    }
+
+
+def _projections(params, x: Array, shifted: Array):
+    mu = params["mu"]
+    def mix(i):
+        return x * mu[i] + shifted * (1.0 - mu[i])
+    r = mix(0) @ params["w_r"]
+    k = mix(1) @ params["w_k"]
+    v = mix(2) @ params["w_v"]
+    dec = jnp.tanh(mix(3) @ params["w_decay1"]) @ params["w_decay2"]
+    log_w = -jnp.exp(jnp.clip(params["w0"].astype(jnp.float32)
+                              + dec.astype(jnp.float32), -8.0, 4.0))
+    w = jnp.exp(log_w).astype(x.dtype)                    # in (0,1)
+    return r, k, v, w
+
+
+def _split_heads(x: Array, n_heads: int) -> Array:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads)
+
+
+_SCAN_CHUNK = 64
+
+
+def rwkv6_forward(params, x: Array, cfg: ModelConfig) -> Array:
+    """x: (B, T, D) full-sequence (train / prefill).
+
+    Two-level scan: the outer scan carries the state across
+    ``_SCAN_CHUNK``-sized chunks (these boundary states are the only
+    residuals the backward saves); the inner per-token scan is rematted,
+    so training memory is O(T / chunk) states instead of O(T)."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    n = d // h
+    r, k, v, w = _projections(params, x, _token_shift(x))
+    u = params["u"].reshape(h, n)
+    r, k, v, w = (_split_heads(a, h) for a in (r, k, v, w))   # (B,T,H,n)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                   # (B,H,n)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)               # (B,H,n,n)
+        out = jnp.einsum("bhij,bhi->bhj", S + u[None, :, :, None] * kv, rt)
+        S_new = wt[..., None] * S + kv
+        return S_new, out
+
+    c = min(_SCAN_CHUNK, t)
+    pad = (-t) % c
+    xs = tuple(jnp.moveaxis(jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                            1, 0) for a in (r, k, v, w))       # (T̃,B,H,n)
+    n_chunks = (t + pad) // c
+    xs = tuple(a.reshape((n_chunks, c) + a.shape[1:]) for a in xs)
+
+    @jax.checkpoint
+    def chunk_step(S, chunk_xs):
+        return jax.lax.scan(step, S, chunk_xs)
+
+    S0 = jnp.zeros((b, h, n, n), x.dtype)
+    _, outs = jax.lax.scan(chunk_step, S0, xs)                 # (nc,c,B,H,n)
+    out = jnp.moveaxis(outs.reshape((n_chunks * c,) + outs.shape[2:]),
+                       0, 1)[:, :t].reshape(b, t, d)
+    return out @ params["w_o"]
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, Array]:
+    h = cfg.n_heads
+    n = cfg.d_model // h
+    return {"S": jnp.zeros((batch, h, n, n), dtype),
+            "prev": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def rwkv6_decode(params, x: Array, state: Dict[str, Array], cfg: ModelConfig
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode. x: (B, 1, D)."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    n = d // h
+    r, k, v, w = _projections(params, x, state["prev"][:, None, :])
+    u = params["u"].reshape(h, n)
+    r, k, v, w = (a.reshape(b, h, n) for a in (r, k, v, w))
+    S = state["S"]
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    out = jnp.einsum("bhij,bhi->bhj", S + u[None, :, :, None] * kv, r)
+    S_new = w[..., None] * S + kv
+    y = out.reshape(b, 1, d) @ params["w_o"]
+    return y, {"S": S_new, "prev": x[:, 0]}

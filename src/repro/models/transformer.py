@@ -1,0 +1,273 @@
+"""Decoder / encoder-decoder transformer assembled from blocks, with
+``lax.scan`` over repeated pattern cycles (bounded HLO at 88 layers x 512
+devices), stub modality frontends, chunked LM loss, and a decode path.
+
+Layer grouping: the per-layer (block_type, is_moe) signature repeats with
+period ``P_eff = lcm(len(block_pattern), moe_every)``. The first
+``R = L // P_eff`` cycles scan over stacked params; the remaining
+``L % P_eff`` layers run unrolled.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.common import (chunked_cross_entropy, dense_init, rms_norm,
+                                 sinusoidal_positions)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _p_eff(cfg: ModelConfig) -> int:
+    p = len(cfg.block_pattern)
+    if cfg.n_experts > 0 and cfg.moe_every > 1:
+        p = math.lcm(p, cfg.moe_every)
+    return min(p, cfg.num_layers)
+
+
+def layer_signature(cfg: ModelConfig, layer_idx: int) -> Tuple[str, bool]:
+    return cfg.layer_types()[layer_idx], cfg.is_moe_layer(layer_idx)
+
+
+def _stack(trees: List[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def init_params(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + cfg.enc_layers + 4)
+    d, v = cfg.d_model, cfg.vocab_size
+    p_eff = _p_eff(cfg)
+    r = cfg.num_layers // p_eff
+    rem = cfg.num_layers % p_eff
+    cross = cfg.is_encdec
+
+    per_layer = [
+        blocks.init_layer(keys[i], cfg, *layer_signature(cfg, i), dtype=dtype,
+                          cross=cross)
+        for i in range(cfg.num_layers)
+    ]
+    scanned = [_stack([per_layer[i * p_eff + j] for i in range(r)])
+               for j in range(p_eff)] if r > 0 else []
+    tail = per_layer[r * p_eff:]
+
+    params: Params = {
+        "embed": dense_init(keys[-1], (v, d), scale=0.02, dtype=dtype),
+        "scanned": scanned,
+        "tail": tail,
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], (d, v), dtype=dtype)
+    if cfg.is_encdec:
+        enc_layers = [blocks.init_layer(keys[cfg.num_layers + i], cfg, "A",
+                                        False, dtype=dtype)
+                      for i in range(cfg.enc_layers)]
+        params["encoder"] = {"layers": _stack(enc_layers),
+                             "final_norm": jnp.zeros((d,), dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+
+def _embed(params, cfg: ModelConfig, tokens: Array) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def logits_fn(params, cfg: ModelConfig, h: Array) -> Array:
+    from repro.sharding.constrain import constrain
+    logits = h @ params["embed"].T if cfg.tie_embeddings \
+        else h @ params["lm_head"]
+    return constrain(logits, {logits.ndim - 1: "model"})
+
+
+def _run_layers(params, cfg: ModelConfig, x: Array, *, prefix_len: int = 0,
+                memory: Optional[Array] = None,
+                positions: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Apply all decoder layers. Returns (hidden, aux_loss)."""
+    p_eff = _p_eff(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def cycle(x_aux, cycle_params):
+        x, aux = x_aux
+        for j in range(p_eff):
+            lt, moe = layer_signature(cfg, j)
+            fwd = partial(blocks.layer_forward, cfg=cfg, layer_type=lt,
+                          is_moe=moe, positions=positions,
+                          prefix_len=prefix_len, memory=memory)
+            if cfg.remat:
+                fwd = jax.checkpoint(fwd)
+            x, a = fwd(cycle_params[j], x)
+            aux = aux + a
+        return (x, aux), None
+
+    if params["scanned"]:
+        (x, aux_total), _ = jax.lax.scan(cycle, (x, aux_total),
+                                         params["scanned"])
+    base = (cfg.num_layers // p_eff) * p_eff
+    for j, lp in enumerate(params["tail"]):
+        lt, moe = layer_signature(cfg, base + j)
+        x, a = blocks.layer_forward(lp, x, cfg=cfg, layer_type=lt,
+                                    is_moe=moe, positions=positions,
+                                    prefix_len=prefix_len, memory=memory)
+        aux_total = aux_total + a
+    return x, aux_total
+
+
+def encode(params, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper-style encoder over stub frame embeddings (B, F, D):
+    bidirectional attention + sinusoidal positions."""
+    enc = params["encoder"]
+    f = frames.shape[1]
+    x = frames + sinusoidal_positions(f, cfg.d_model).astype(frames.dtype)
+
+    def body(x, lp):
+        y, _ = blocks.layer_forward(lp, x, cfg=cfg, layer_type="A",
+                                    is_moe=False, prefix_len=f)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict[str, Array]
+                   ) -> Tuple[Array, Array, int]:
+    """Embed (+ modality prefix), run layers. Returns
+    (hidden (B,S,D), aux_loss, text_offset)."""
+    from repro.sharding.constrain import constrain
+    tokens = batch["tokens"]
+    x = constrain(_embed(params, cfg, tokens), {0: ("pod", "data")})
+    prefix_len = 0
+    memory = None
+    if cfg.vis_tokens > 0 and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        prefix_len = batch["patches"].shape[1]
+    if cfg.is_encdec:
+        memory = encode(params, cfg, batch["frames"])
+    b, s, _ = x.shape
+    if cfg.rope_theta <= 0 and cfg.family != "ssm":
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(s)
+    h, aux = _run_layers(params, cfg, x, prefix_len=prefix_len,
+                         memory=memory, positions=positions)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux, prefix_len
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array],
+            loss_chunk: int = 512) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token LM loss (+ MoE aux). ``batch``: tokens (B,S_text),
+    optional labels/mask (default: shifted tokens), optional
+    patches/frames for VLM/audio."""
+    h, aux, off = forward_hidden(params, cfg, batch)
+    tokens = batch["tokens"]
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate([tokens[:, 1:],
+                                  jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+        mask = mask.at[:, -1].set(0.0)
+    h_text = h[:, off:]                       # drop modality prefix
+    lm = chunked_cross_entropy(
+        lambda hc: logits_fn(params, cfg, hc), h_text, labels,
+        mask.astype(jnp.float32), chunk=loss_chunk,
+        logit_softcap_val=cfg.logit_softcap)
+    total = lm + aux
+    return total, {"lm_loss": lm, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32, memory: Optional[Array] = None) -> Params:
+    p_eff = _p_eff(cfg)
+    r = cfg.num_layers // p_eff
+    cross = cfg.is_encdec
+
+    per_layer = [
+        blocks.init_layer_cache(cfg, cfg.layer_types()[i], batch, max_len,
+                                dtype, cross=cross)
+        for i in range(cfg.num_layers)
+    ]
+    if cross and memory is not None:
+        # precompute cross-attention K/V per layer
+        from repro.models.attention import init_cross_cache
+        for i in range(cfg.num_layers):
+            lp = _layer_params(params, cfg, i)
+            per_layer[i]["cross"] = init_cross_cache(lp["cross"], memory, cfg)
+    scanned = [_stack([per_layer[i * p_eff + j] for i in range(r)])
+               for j in range(p_eff)] if r > 0 else []
+    return {"scanned": scanned, "tail": per_layer[r * p_eff:]}
+
+
+def _layer_params(params, cfg: ModelConfig, i: int) -> Params:
+    p_eff = _p_eff(cfg)
+    r = cfg.num_layers // p_eff
+    if i < r * p_eff:
+        grp = params["scanned"][i % p_eff]
+        return jax.tree.map(lambda x: x[i // p_eff], grp)
+    return params["tail"][i - r * p_eff]
+
+
+def decode_step(params, cfg: ModelConfig, cache: Params, token: Array,
+                index: Array) -> Tuple[Array, Params]:
+    """One decode step. token: (B,) int32; index: scalar absolute position.
+    Returns (logits (B, V), new cache)."""
+    x = _embed(params, cfg, token[:, None])
+    if cfg.rope_theta <= 0 and cfg.family != "ssm":
+        # sinusoidal position for the current index
+        d = cfg.d_model
+        div = jnp.exp(-math.log(10000.0)
+                      * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+        ang = index.astype(jnp.float32) * div
+        pe = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang))
+        pe = pe.at[1::2].set(jnp.cos(ang))
+        x = x + pe.astype(x.dtype)
+    p_eff = _p_eff(cfg)
+
+    def cycle(x, scanned):
+        cycle_params, cycle_cache = scanned
+        new_caches = []
+        for j in range(p_eff):
+            lt, moe = layer_signature(cfg, j)
+            x, nc = blocks.layer_decode(cycle_params[j], x, cycle_cache[j],
+                                        index, cfg=cfg, layer_type=lt,
+                                        is_moe=moe)
+            new_caches.append(nc)
+        return x, new_caches
+
+    new_cache: Params = {"scanned": [], "tail": []}
+    if params["scanned"]:
+        def body(x, pc):
+            return cycle(x, pc)
+        x, upd = jax.lax.scan(body, x, (params["scanned"],
+                                        cache["scanned"]))
+        new_cache["scanned"] = upd
+    base = (cfg.num_layers // p_eff) * p_eff
+    for j, (lp, lc) in enumerate(zip(params["tail"], cache["tail"])):
+        lt, moe = layer_signature(cfg, base + j)
+        x, nc = blocks.layer_decode(lp, x, lc, index, cfg=cfg,
+                                    layer_type=lt, is_moe=moe)
+        new_cache["tail"].append(nc)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    if cfg.logit_softcap > 0:
+        from repro.models.common import softcap
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits, new_cache

@@ -1,0 +1,100 @@
+"""Optimizers (pytree-native, optax-style pure functions): SGD(+momentum),
+AdamW with fp32 master accounting, global-norm clipping, LR schedules."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: Array
+    mu: Params            # momentum / first moment (None-like zeros)
+    nu: Optional[Params]  # second moment (adamw only)
+
+
+def _zeros_like_f32(t):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, Array]:
+    sq = jax.tree.reduce(
+        jnp.add, jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2),
+                              grads))
+    gnorm = jnp.sqrt(jnp.maximum(sq, 1e-20))
+    scale = jnp.minimum(1.0, max_norm / gnorm)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def sgd(lr: float | Callable[[Array], Array], momentum: float = 0.0):
+    def init(params: Params) -> OptState:
+        mu = _zeros_like_f32(params) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads: Params, state: OptState, params: Params
+               ) -> Tuple[Params, OptState]:
+        lr_t = lr(state.step) if callable(lr) else lr
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.mu, grads)
+            upd = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype),
+                               mu, params)
+        else:
+            mu = None
+            upd = jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype),
+                               grads, params)
+        new = jax.tree.map(jnp.add, params, upd)
+        return new, OptState(state.step + 1, mu, None)
+
+    return init, update
+
+
+def adamw(lr: float | Callable[[Array], Array], b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0):
+    def init(params: Params) -> OptState:
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                        _zeros_like_f32(params))
+
+    def update(grads: Params, state: OptState, params: Params
+               ) -> Tuple[Params, OptState]:
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            step_val = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_val).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, OptState(step, mu, nu)
+
+    return init, update
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[Array], Array]:
+    def sched(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+OPTIMIZERS = {"sgd": sgd, "adamw": adamw}

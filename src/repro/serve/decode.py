@@ -1,0 +1,99 @@
+"""Serving path: batched one-token decode (``serve_step``) with sharded
+KV caches, plus a prefill step. Decode shapes in the dry-run lower these.
+
+Cache sharding (DESIGN.md §5): batch over the data axes when divisible
+(decode_32k: 128 sequences / 16 groups); for batch-1 long-context
+(long_500k) the cache *sequence* dim shards over ``data`` instead and the
+partial-softmax combine is inserted by GSPMD (distributed-cache decode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.models import transformer as tfm
+from repro.sharding.specs import (batch_specs, cache_specs, data_axes,
+                                  param_specs)
+
+Array = jax.Array
+
+
+def make_serve_step(model: Model, mesh: Optional[Mesh], *, batch: int,
+                    max_len: int, cache_dtype=jnp.bfloat16,
+                    sample: bool = False):
+    """Returns ``(serve_step, shardings)`` where
+    ``serve_step(params, cache, token, index[, key]) -> (next_token_logits,
+    new_cache)`` is jitted with explicit in/out shardings when a mesh is
+    given."""
+    cfg = model.cfg
+
+    def serve_step(params, cache, token, index):
+        logits, new_cache = tfm.decode_step(params, cfg, cache, token, index)
+        return logits, new_cache
+
+    if mesh is None:
+        return jax.jit(serve_step, donate_argnums=(1,)), None
+
+    pspecs = param_specs(jax.eval_shape(
+        lambda k: model.init(k), jax.random.PRNGKey(0)), cfg, mesh)
+    cache_shape = jax.eval_shape(
+        lambda p: tfm.init_cache(p, cfg, batch, max_len, cache_dtype),
+        jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0)))
+    cspecs = cache_specs(cache_shape, cfg, mesh, batch)
+    tok_spec = batch_specs(cfg, mesh, batch)
+
+    shardings = {
+        "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+        "cache": jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs),
+        "token": NamedSharding(mesh, tok_spec),
+    }
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(shardings["params"], shardings["cache"],
+                      shardings["token"], None),
+        out_shardings=(NamedSharding(mesh, tok_spec), shardings["cache"]),
+        donate_argnums=(1,),
+    )
+    return jitted, shardings
+
+
+def make_prefill_step(model: Model, mesh: Optional[Mesh], *, batch: int):
+    """Full-sequence forward producing last-position logits (the
+    prefill_32k dry-run shape)."""
+    cfg = model.cfg
+
+    def prefill(params, batch_inputs):
+        h, _, off = tfm.forward_hidden(params, cfg, batch_inputs)
+        logits = tfm.logits_fn(params, cfg, h[:, -1:])[:, 0]
+        from repro.models.common import softcap
+        return softcap(logits, cfg.logit_softcap)
+
+    if mesh is None:
+        return jax.jit(prefill)
+    pspecs = param_specs(jax.eval_shape(
+        lambda k: model.init(k), jax.random.PRNGKey(0)), cfg, mesh)
+    return jax.jit(
+        prefill,
+        in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+                      None))
+
+
+def greedy_generate(model: Model, params, prompt: Array, steps: int,
+                    max_len: int) -> Array:
+    """Small-scale CPU generation helper for examples/tests."""
+    b, s = prompt.shape
+    _, cache = model.prefill(params, {"tokens": prompt}, max_len)
+    tok = jnp.argmax(jax.nn.one_hot(prompt[:, -1], model.cfg.vocab_size), -1)
+    out = [prompt]
+    step_fn = jax.jit(lambda p, c, t, i: tfm.decode_step(p, model.cfg, c, t, i))
+    for i in range(steps):
+        logits, cache = step_fn(params, cache, tok, jnp.asarray(s + i))
+        tok = jnp.argmax(logits, axis=-1)
+        out.append(tok[:, None])
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (batch_specs, cache_specs, data_axes,
+                                  param_specs, tree_batch_specs)
+
+__all__ = ["batch_specs", "cache_specs", "data_axes", "param_specs",
+           "tree_batch_specs"]

@@ -1,0 +1,62 @@
+"""Best-effort intermediate sharding constraints.
+
+``constrain(x, {dim: axis})`` applies ``with_sharding_constraint`` against
+the *ambient* mesh (jax.set_mesh) when the named axis exists, is free
+(auto — not shard_map-manual), and divides the dimension; otherwise it is
+a no-op. This lets model code hint GSPMD about fat intermediates (vocab
+logits, MoE dispatch buffers) without threading a mesh handle everywhere,
+and the same code stays runnable on a single CPU device.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Sequence[str]]
+
+
+def _usable_axes(mesh, axes: Axis):
+    """Filter to axes present on the mesh and not shard_map-manual.
+    Returns (names, combined_size)."""
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    out = []
+    size = 1
+    for a in names:
+        if a not in mesh.axis_names:
+            continue
+        # manual (shard_map) axes cannot be constrained from inside
+        try:
+            if str(mesh._name_to_type[a]).endswith("Manual"):  # pragma: no cover
+                continue
+        except Exception:
+            pass
+        out.append(a)
+        size *= mesh.shape[a]
+    return tuple(out), size
+
+
+def constrain(x: jax.Array, dims: Dict[int, Axis]) -> jax.Array:
+    """Apply P(...) with ``dims[d] = axis-name(s)`` on dim d, best-effort."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        entries = [None] * x.ndim
+        ok = False
+        for d, ax in dims.items():
+            d = d % x.ndim
+            names, size = _usable_axes(mesh, ax)
+            if not names or size <= 1:
+                continue
+            if x.shape[d] % size or x.shape[d] < size:
+                continue
+            entries[d] = names if len(names) > 1 else names[0]
+            ok = True
+        if not ok:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x

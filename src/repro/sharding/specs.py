@@ -1,0 +1,185 @@
+"""Partition rules: param/batch/cache PartitionSpecs per (arch x shape x
+mesh).
+
+Parameter rule: name-based preferred-dimension lists (Megatron-style:
+heads/d_ff/vocab/experts over ``model``), falling back to
+largest-divisible-dim; FSDP archs additionally shard one remaining dim
+over ``data``. Scan-stacked layer params never shard their leading
+(layer) dim. Dims that interact with the RoPE rotate-half trick (head_dim)
+are deprioritized.
+
+Batch rule: the client/batch leading dim shards over ('pod','data');
+batch-1 decode (long_500k) shards the KV-cache *sequence* dim over
+``data`` instead (distributed-cache decode)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# preferred shard dims per parameter name (indices into the *unscanned*
+# shape), tried in order; first divisible wins.
+_PREFS: Dict[str, Tuple[int, ...]] = {
+    "wq": (1, 0),          # (D, H, hd): heads, then D (row-parallel)
+    "wk": (1, 0),
+    "wv": (1, 0),
+    "wo": (0, 2),          # (H, hd, D)
+    "embed": (0, 1),       # (V, D)
+    "lm_head": (1, 0),     # (D, V)
+    "w_gate": (-1, 0),     # dense (D,F) / moe (E,D,F): last dim = F
+    "w_up": (-1, 0),
+    "w_down": (-2, -1),    # (F, D) / (E, F, D): F first
+    "router": (1, 0),      # (D, E)
+    "w_in": (1, 0), "w_out": (0, 1),
+    "w_a": (1,), "w_i": (1,),
+    "w_r": (1, 0), "w_k": (1, 0), "w_v": (0, 1), "w_o": (0, 1),
+    "w_decay1": (0,), "w_decay2": (1,),
+}
+_MOE_PREFS = {"w_gate": (0, 2), "w_up": (0, 2), "w_down": (0, 1)}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _pick(shape: Tuple[int, ...], prefs: Tuple[int, ...], size: int,
+          taken: set) -> Optional[int]:
+    ndim = len(shape)
+    cands = [p % ndim for p in prefs] + sorted(
+        range(ndim), key=lambda i: -shape[i])
+    for c in cands:
+        if c not in taken and shape[c] % size == 0 and shape[c] >= size:
+            return c
+    return None
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec matching ``params``."""
+    model_size = _axis_size(mesh, "model") if "model" in mesh.axis_names else 1
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([_axis_size(mesh, a) for a in daxes])) if daxes else 1
+    moe = cfg.n_experts > 0
+
+    def spec_for(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        scanned = keys[0] == "scanned"
+        shape = tuple(leaf.shape)
+        offset = 1 if scanned else 0
+        core = shape[offset:]
+        if len(core) <= 1 or leaf.size * 4 < 1 << 16:
+            return P()                      # small tensors: replicate
+        assign: Dict[int, Any] = {}
+        taken: set = set()
+        prefs = _PREFS.get(name, ())
+        if moe and name in _MOE_PREFS and len(core) == 3:
+            prefs = _MOE_PREFS[name]
+        if model_size > 1:
+            m = _pick(core, prefs, model_size, taken)
+            if m is not None:
+                assign[m] = "model"
+                taken.add(m)
+        if cfg.fsdp and daxes and dsize > 1:
+            d = _pick(core, tuple(p for p in prefs if (p % len(core)) not in taken),
+                      dsize, taken)
+            if d is not None:
+                assign[d] = daxes if len(daxes) > 1 else daxes[0]
+                taken.add(d)
+        entries = [assign.get(i, None) for i in range(len(core))]
+        if scanned:
+            entries = [None] + entries
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_state_specs(opt_state: Any, params: Any, cfg: ModelConfig,
+                    mesh: Mesh) -> Any:
+    """ZeRO-1: optimizer moments follow the param sharding PLUS one extra
+    dim sharded over the data axes where divisible (the g_global update is
+    replicated across data, so each group can own a moment slice)."""
+    import dataclasses
+    pspecs = param_specs(params, dataclasses.replace(cfg, fsdp=True), mesh)
+
+    def match(path, leaf):
+        # OptState(step, mu, nu): mu/nu mirror the param tree
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if leaf.ndim == 0:
+            return P()
+        sub = pspecs
+        try:
+            for k in keys[1:]:
+                if isinstance(sub, (list, tuple)):
+                    sub = sub[int(k)]
+                else:
+                    sub = sub[k]
+            return sub if isinstance(sub, P) else P()
+        except Exception:
+            return P()
+
+    return jax.tree_util.tree_map_with_path(match, opt_state)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_size: int) -> P:
+    """Spec for a (B, ...) batch leaf: shard B over ('pod','data') when
+    divisible, else replicate."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([_axis_size(mesh, a) for a in daxes])) if daxes else 1
+    if daxes and batch_size % dsize == 0 and batch_size >= dsize:
+        return P(daxes if len(daxes) > 1 else daxes[0])
+    return P()
+
+
+def tree_batch_specs(batch: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    def spec_for(leaf):
+        b = leaf.shape[0]
+        s = batch_specs(cfg, mesh, b)
+        return P(*(list(s) + [None] * (len(leaf.shape) - len(s))))
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
+    """KV caches: shard batch over data axes when divisible; otherwise
+    shard the *sequence/state* dim (dim 1 for (B,S,KV,hd) attn caches,
+    heads for rwkv state, feature dim for rglru state)."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([_axis_size(mesh, a) for a in daxes])) if daxes else 1
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    msize = _axis_size(mesh, "model") if "model" in mesh.axis_names else 1
+
+    def spec_for(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        scanned = keys[0] == "scanned"
+        shape = tuple(leaf.shape)
+        off = 1 if scanned else 0
+        core = shape[off:]
+        ent: list = [None] * len(core)
+        if name == "pos" or len(core) < 2:
+            pass
+        elif core[0] % dsize == 0 and core[0] >= dsize and dsize > 1:
+            ent[0] = dax                       # batch-sharded
+            # additionally shard kv-heads (or head_dim when kv-heads do
+            # not divide) over the model axis — a 32k-token cache for an
+            # 88-layer model exceeds HBM under batch sharding alone
+            if name in ("k", "v") and len(core) == 4 and msize > 1:
+                if core[2] % msize == 0 and core[2] >= msize:
+                    ent[2] = "model"
+                elif core[3] % msize == 0 and core[3] >= msize:
+                    ent[3] = "model"
+        elif dsize > 1 and len(core) >= 2 and core[1] % dsize == 0 \
+                and core[1] >= dsize:
+            ent[1] = dax                       # sequence/state-sharded
+        if scanned:
+            ent = [None] + ent
+        return P(*ent)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

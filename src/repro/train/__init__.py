@@ -1,0 +1,6 @@
+from repro.train.steps import (MeshTopology, make_fl_train_step,
+                               make_fused_step, make_plain_step,
+                               make_two_phase_step)
+
+__all__ = ["MeshTopology", "make_fl_train_step", "make_fused_step",
+           "make_plain_step", "make_two_phase_step"]

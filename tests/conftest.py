@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run single-device CPU (the dry-run alone uses 512 placeholder
+# devices — never set xla_force_host_platform_device_count here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

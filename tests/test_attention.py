@@ -1,0 +1,108 @@
+"""Attention unit tests: masking disciplines, flash-decode equivalence,
+q-chunk invariance, softcap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+import repro.models.attention as A
+from repro.configs import get_arch, reduced
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return replace(reduced(get_arch("gemma2-2b"), d_model=64),
+                   n_heads=4, n_kv_heads=2, head_dim=16, window=8,
+                   chunk=16, attn_softcap=0.0, rope_theta=10000.0)
+
+
+def _setup(cfg, t=24, b=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = A.init_attn(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (b, t, cfg.d_model)) * 0.3
+    return params, x
+
+
+def test_q_chunk_invariance(cfg):
+    """Output must not depend on the scan chunking."""
+    params, x = _setup(cfg)
+    y1 = A.attn_forward(params, x, cfg=cfg, layer_type="A", q_chunk=4)
+    y2 = A.attn_forward(params, x, cfg=cfg, layer_type="A", q_chunk=24)
+    np.testing.assert_allclose(np.array(y1), np.array(y2), atol=1e-5)
+
+
+def test_q_chunk_padding_path(cfg):
+    """t not divisible by q_chunk exercises the pad branch."""
+    params, x = _setup(cfg, t=23)
+    y1 = A.attn_forward(params, x, cfg=cfg, layer_type="A", q_chunk=8)
+    y2 = A.attn_forward(params, x, cfg=cfg, layer_type="A", q_chunk=23)
+    np.testing.assert_allclose(np.array(y1), np.array(y2), atol=1e-5)
+
+
+def test_causality(cfg):
+    params, x = _setup(cfg)
+    y1 = A.attn_forward(params, x, cfg=cfg, layer_type="A")
+    x2 = x.at[:, -1].add(10.0)
+    y2 = A.attn_forward(params, x2, cfg=cfg, layer_type="A")
+    np.testing.assert_allclose(np.array(y1[:, :-1]), np.array(y2[:, :-1]),
+                               atol=1e-5)
+
+
+def test_window_mask_blocks_far_tokens(cfg):
+    params, x = _setup(cfg)
+    y1 = A.attn_forward(params, x, cfg=cfg, layer_type="L")
+    x2 = x.at[:, 0].add(10.0)          # outside window 8 for pos >= 8
+    y2 = A.attn_forward(params, x2, cfg=cfg, layer_type="L")
+    np.testing.assert_allclose(np.array(y1[:, 10:]), np.array(y2[:, 10:]),
+                               atol=1e-5)
+
+
+def test_chunk_mask_blocks_cross_chunk(cfg):
+    params, x = _setup(cfg, t=40)
+    y1 = A.attn_forward(params, x, cfg=cfg, layer_type="C")
+    x2 = x.at[:, 3].add(10.0)          # chunk 0 (chunk size 16)
+    y2 = A.attn_forward(params, x2, cfg=cfg, layer_type="C")
+    # positions in chunk 1 (16..31) never see chunk 0
+    np.testing.assert_allclose(np.array(y1[:, 16:]), np.array(y2[:, 16:]),
+                               atol=1e-5)
+
+
+def test_flash_decode_matches_plain(cfg, monkeypatch):
+    key = jax.random.PRNGKey(0)
+    b, s, kv, g, hd = 2, 50, 2, 2, 16
+    q = jax.random.normal(key, (b, 1, kv, g, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd))
+    valid = jnp.arange(s) < 37
+    ref = A._sdpa(q, k, v, valid[None, None, None, None, :], 0.0)
+    monkeypatch.setattr(A, "_DECODE_CHUNK", 16)
+    out = A._decode_attn(q, k, v, valid, 0.0)
+    np.testing.assert_allclose(np.array(out), np.array(ref), atol=2e-6)
+    # with softcap
+    ref2 = A._sdpa(q, k, v, valid[None, None, None, None, :], 30.0)
+    out2 = A._decode_attn(q, k, v, valid, 30.0)
+    np.testing.assert_allclose(np.array(out2), np.array(ref2), atol=2e-6)
+
+
+def test_ring_cache_slots(cfg):
+    """Sliding-window cache reuses slots mod window; decode at position
+    >= window keeps exactly the last `window` keys valid."""
+    c = A.init_attn_cache(cfg, "L", batch=1, max_len=100)
+    assert c["k"].shape[1] == cfg.window
+    params, x = _setup(cfg, t=1, b=1)
+    cache = c
+    for i in range(12):                 # > window=8
+        _, cache = A.attn_decode(params, x, cache, jnp.asarray(i),
+                                 cfg=cfg, layer_type="L")
+    pos = np.array(cache["pos"])
+    assert sorted(pos.tolist()) == list(range(4, 12))
+
+
+def test_softcap_changes_scores(cfg):
+    params, x = _setup(cfg)
+    cfg_cap = replace(cfg, attn_softcap=5.0)
+    y1 = A.attn_forward(params, x, cfg=cfg, layer_type="A")
+    y2 = A.attn_forward(params, x, cfg=cfg_cap, layer_type="A")
+    assert float(jnp.abs(y1 - y2).max()) > 1e-6

@@ -1,0 +1,179 @@
+"""Unit tests for trust/reputation/selection/cost/aggregation (Eq. 1–13)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CloudTopology, CostModel, ReputationState,
+                        cloud_trust, cost_trustfl_aggregate, ema_update,
+                        normalize_scores, normalize_updates, select_clients,
+                        select_clients_jax, trust_scores, trusted_aggregate)
+
+
+# --- Eq. 8–9 -----------------------------------------------------------------
+
+def test_normalize_scores_sums_to_one():
+    phi = jnp.array([1.0, 2.0, 3.0, 0.0])
+    r = normalize_scores(phi)
+    assert np.isclose(float(r.sum()), 1.0)
+    assert np.isclose(float(r[2]), 0.5)
+
+
+def test_normalize_scores_all_zero_is_uniform():
+    r = normalize_scores(jnp.zeros(4))
+    assert np.allclose(np.array(r), 0.25)
+
+
+def test_ema_update_blends_and_respects_participation():
+    st = ReputationState.init(4)
+    r_new = jnp.array([0.4, 0.3, 0.2, 0.1])
+    part = jnp.array([True, True, False, False])
+    st2 = ema_update(st, r_new, gamma=0.5, participated=part)
+    assert np.isclose(float(st2.ema[0]), 0.5 * 0.25 + 0.5 * 0.4)
+    assert np.isclose(float(st2.ema[2]), 0.25)          # untouched
+
+
+# --- Eq. 11–13 ---------------------------------------------------------------
+
+def test_trust_scores_zero_for_antialigned():
+    ref = jnp.ones((1, 8))
+    g = jnp.stack([jnp.ones(8), -jnp.ones(8)])
+    ts = trust_scores(g, ref[0], jnp.array([0.5, 0.5]))
+    assert float(ts[0]) > 0 and float(ts[1]) == 0.0
+
+
+def test_normalize_updates_matches_ref_norm():
+    g = jnp.array([[3.0, 4.0], [6.0, 8.0]])
+    ref = jnp.array([1.0, 0.0])
+    gt = normalize_updates(g, ref)
+    assert np.allclose(np.linalg.norm(np.array(gt), axis=1), 1.0)
+
+
+def test_trusted_aggregate_is_convex_combination():
+    g = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+    ts = jnp.array([3.0, 1.0])
+    out = np.array(trusted_aggregate(g, ts))
+    assert np.allclose(out, [0.75, 0.25])
+
+
+def test_cloud_trust_normalizes():
+    g = jnp.array([[1.0, 0.0], [1.0, 0.1], [-1.0, 0.0]])
+    ref = jnp.array([1.0, 0.0])
+    beta = np.array(cloud_trust(g, ref))
+    assert np.isclose(beta.sum(), 1.0) and beta[2] == 0.0
+
+
+# --- Eq. 10 (selection) ------------------------------------------------------
+
+def test_selection_prefers_cheap_clients_at_equal_reputation():
+    rep = np.full(6, 1.0)
+    costs = np.array([0.01, 0.01, 0.09, 0.09, 0.09, 0.09])
+    sel = select_clients(rep, costs, m=2)
+    assert sel[:2].all() and not sel[2:].any()
+
+
+def test_selection_prefers_reputation_at_equal_cost():
+    rep = np.array([0.1, 0.9, 0.5, 0.7])
+    sel = select_clients(rep, np.full(4, 0.09), m=2)
+    assert sel[1] and sel[3] and not sel[0]
+
+
+def test_selection_jax_matches_numpy():
+    rng = np.random.default_rng(0)
+    rep = rng.random(16).astype(np.float32)
+    costs = rng.choice([0.01, 0.09], 16).astype(np.float32)
+    a = select_clients(rep, costs, m=5)
+    b = np.array(select_clients_jax(jnp.asarray(rep), jnp.asarray(costs), 5))
+    assert (a == b).all()
+
+
+def test_selection_per_cloud_quota():
+    rep = np.array([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    cloud = np.array([0, 0, 0, 1, 1, 1])
+    sel = select_clients(rep, np.full(6, 0.01), m=4, per_cloud_min=1,
+                         cloud_of=cloud)
+    assert sel[3:].sum() >= 1                     # cloud 1 kept alive
+
+
+# --- Eq. 1–3 (cost) ----------------------------------------------------------
+
+def test_flat_cost_matches_eq1():
+    topo = CloudTopology.even(3, 2)
+    cm = CostModel(c_intra=0.01, c_cross=0.09, bytes_per_param=4)
+    sel = np.array([True] * 6)
+    d = 1024 ** 3 // 4                            # exactly 1 GB of params
+    flat = cm.round_cost(topo, sel, d, hierarchical=False)
+    # 2 clients intra (cloud 0) + 4 cross
+    assert np.isclose(flat, 2 * 0.01 + 4 * 0.09)
+
+
+def test_hierarchical_cheaper_than_flat():
+    topo = CloudTopology.even(3, 30)
+    cm = CostModel()
+    sel = np.ones(90, bool)
+    d = 10_000_000
+    assert cm.round_cost(topo, sel, d, True) < cm.round_cost(topo, sel, d,
+                                                             False)
+
+
+def test_full_participation_upper_bound_eq3():
+    topo = CloudTopology.even(3, 30)
+    cm = CostModel()
+    d = 10_000_000
+    assert cm.round_cost(topo, np.ones(90, bool), d, True) <= \
+        cm.full_participation_cost(topo, d) + 1e-9
+
+
+# --- full aggregation pipeline ----------------------------------------------
+
+def _setup_agg(n=12, d=64, k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    ref_dir = rng.normal(size=d)
+    honest = 0.9 * ref_dir + 0.3 * rng.normal(size=(n, d))
+    refs = 0.95 * ref_dir + 0.1 * rng.normal(size=(k, d))
+    return (jnp.asarray(honest, jnp.float32), jnp.asarray(refs, jnp.float32),
+            jnp.asarray(np.repeat(np.arange(k), n // k)))
+
+
+def test_aggregate_downweights_scaled_attackers():
+    u, refs, cloud = _setup_agg()
+    u_attacked = u.at[0].multiply(100.0)          # scaling attack
+    res = cost_trustfl_aggregate(
+        u_attacked, u_attacked[:, :16], refs, refs[:, :16], cloud,
+        jnp.ones(12, bool), ReputationState.init(12))
+    # Eq. 12 rescales: the aggregate norm stays at reference scale
+    assert float(jnp.linalg.norm(res.update)) < 10 * float(
+        jnp.linalg.norm(refs[0]))
+
+
+def test_aggregate_zeroes_sign_flippers():
+    u, refs, cloud = _setup_agg()
+    u_attacked = u.at[:4].multiply(-1.0)
+    res = cost_trustfl_aggregate(
+        u_attacked, u_attacked[:, :16], refs, refs[:, :16], cloud,
+        jnp.ones(12, bool), ReputationState.init(12))
+    trust = np.array(res.trust)
+    assert trust[:4].max() <= trust[4:].min() + 1e-9
+    # the update still points along the honest direction
+    cos = float(u[5] @ res.update /
+                (jnp.linalg.norm(u[5]) * jnp.linalg.norm(res.update)))
+    assert cos > 0.5
+
+
+def test_aggregate_beta_sums_to_one():
+    u, refs, cloud = _setup_agg()
+    res = cost_trustfl_aggregate(u, u[:, :16], refs, refs[:, :16], cloud,
+                                 jnp.ones(12, bool),
+                                 ReputationState.init(12))
+    assert np.isclose(float(res.beta.sum()), 1.0, atol=1e-5)
+
+
+def test_aggregate_ignores_unselected():
+    u, refs, cloud = _setup_agg()
+    poisoned = u.at[0].set(1e6)
+    sel = jnp.ones(12, bool).at[0].set(False)
+    res = cost_trustfl_aggregate(poisoned, poisoned[:, :16], refs,
+                                 refs[:, :16], cloud, sel,
+                                 ReputationState.init(12))
+    assert float(res.trust[0]) == 0.0
+    assert np.isfinite(np.array(res.update)).all()

@@ -1,0 +1,126 @@
+"""Substrates: Dirichlet partitioning, synthetic data, optimizers,
+checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.fl_types import CloudTopology
+from repro.data import (build_federated, dirichlet_partition, iid_partition,
+                        make_cifar10_like, make_femnist_like,
+                        make_token_stream, token_batches)
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+
+
+# --- data --------------------------------------------------------------------
+
+def test_dirichlet_partition_covers_all_and_skews():
+    labels = np.repeat(np.arange(10), 100)
+    parts = dirichlet_partition(labels, 20, alpha=0.1, seed=0)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(set(all_idx.tolist())) == 1000
+    # low alpha -> clients should be class-skewed vs the global histogram
+    ent = []
+    for p in parts:
+        h = np.bincount(labels[p], minlength=10) / len(p)
+        ent.append(-(h[h > 0] * np.log(h[h > 0])).sum())
+    assert np.mean(ent) < 0.8 * np.log(10)
+
+
+def test_dirichlet_more_uniform_at_high_alpha():
+    labels = np.repeat(np.arange(10), 200)
+    lo = dirichlet_partition(labels, 10, alpha=0.1, seed=1)
+    hi = dirichlet_partition(labels, 10, alpha=100.0, seed=1)
+
+    def mean_entropy(parts):
+        es = []
+        for p in parts:
+            h = np.bincount(labels[p], minlength=10) / len(p)
+            es.append(-(h[h > 0] * np.log(h[h > 0])).sum())
+        return np.mean(es)
+    assert mean_entropy(hi) > mean_entropy(lo)
+
+
+def test_synthetic_datasets_learnable_shapes():
+    ds = make_cifar10_like(500, seed=0)
+    assert ds.x.shape == (500, 32, 32, 3) and ds.n_classes == 10
+    ds2 = make_femnist_like(400, seed=0)
+    assert ds2.x.shape == (400, 28, 28, 1) and ds2.n_classes == 62
+    assert 0 <= ds.x.min() and ds.x.max() <= 1.0
+
+
+def test_build_federated_structure():
+    topo = CloudTopology.even(3, 4)
+    ds = make_cifar10_like(2000, seed=0)
+    fd = build_federated(ds, topo, alpha=0.5, samples_per_client=32,
+                         ref_samples=20)
+    assert fd.client_x.shape == (12, 32, 32, 32, 3)
+    assert fd.ref_x.shape == (3, 20, 32, 32, 3)
+    assert len(fd.test_x) > 0
+
+
+def test_token_stream_batches():
+    stream = make_token_stream(5000, vocab=512, seed=0)
+    it = token_batches(stream, batch=4, seq=16, seed=0)
+    b = next(it)
+    assert b.shape == (4, 17) and b.max() < 512
+
+
+# --- optim -------------------------------------------------------------------
+
+def _quad_problem():
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grad_fn = jax.grad(lambda p: jnp.sum(p["w"] ** 2))
+    return params, grad_fn
+
+
+@pytest.mark.parametrize("opt_fn", [lambda: sgd(0.1),
+                                    lambda: sgd(0.1, momentum=0.9),
+                                    lambda: adamw(0.1)])
+def test_optimizers_descend(opt_fn):
+    init, update = opt_fn()
+    params, grad_fn = _quad_problem()
+    state = init(params)
+    for _ in range(80):
+        g = grad_fn(params)
+        params, state = update(g, state, params)
+    assert float(jnp.sum(params["w"] ** 2)) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 5.0)
+    total = jnp.sqrt(clipped["a"] ** 2 + clipped["b"] ** 2)
+    assert np.isclose(float(total[0]), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert np.isclose(float(s(jnp.asarray(10))), 1.0)
+    assert float(s(jnp.asarray(100))) < 0.2
+
+
+# --- checkpoint ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                      "b": jnp.zeros(3)},
+            "scanned": [jnp.ones((2, 4))]}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=7,
+                    metadata={"arch": "test"})
+    restored, meta = restore_checkpoint(str(tmp_path / "ck"), tree)
+    assert meta["step"] == 7 and meta["arch"] == "test"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.ones((2, 2))}
+    save_checkpoint(str(tmp_path / "ck"), tree)
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path / "ck"), {"w": jnp.ones((3, 2))})

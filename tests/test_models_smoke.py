@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED variant of every
+assigned family — one forward/train step on CPU, asserting output shapes
+and no NaNs — plus decode-vs-forward consistency for the cache path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS
+from repro.models import build_model
+from repro.models import transformer as tfm
+from repro.models.common import softcap
+
+BATCH, SEQ = 2, 24
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, key):
+    m = build_model(arch, smoke=True)
+    cfg = m.cfg
+    assert cfg.d_model <= 512 and cfg.num_layers <= 2
+    assert cfg.n_experts <= 4
+    params = m.init(key)
+    batch = m.dummy_batch(key, batch=BATCH, seq=SEQ)
+
+    # forward: hidden shape
+    h, aux, off = tfm.forward_hidden(params, cfg, batch)
+    text = SEQ - cfg.vis_tokens if cfg.vis_tokens else SEQ
+    assert h.shape == (BATCH, text + off, cfg.d_model)
+    assert np.isfinite(np.array(h, np.float32)).all()
+
+    # one train step: loss + grads finite, params change
+    (loss, metrics), grads = m.grad_fn()(params, batch)
+    assert np.isfinite(float(loss))
+    gsq = jax.tree.reduce(
+        jnp.add, jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2),
+                              grads))
+    assert np.isfinite(float(gsq)) and float(gsq) > 0
+    new = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    changed = jax.tree.reduce(
+        jnp.add, jax.tree.map(lambda a, b: jnp.sum(jnp.abs(a - b)), params,
+                              new))
+    assert float(changed) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "paligemma-3b"])
+def test_smoke_decode_matches_forward(arch, key):
+    """KV-cache/state decode equals the full-sequence forward."""
+    m = build_model(arch, smoke=True)
+    if m.cfg.n_experts:
+        # capacity-based token dropping legitimately differs between
+        # full-sequence and per-token routing; test the cache path in the
+        # drop-free regime where decode must match exactly
+        from dataclasses import replace
+        from repro.models.model import Model
+        m = Model(replace(m.cfg, capacity_factor=10.0))
+    cfg = m.cfg
+    params = m.init(key)
+    batch = m.dummy_batch(key, batch=BATCH, seq=12)
+    h, _, off = tfm.forward_hidden(params, cfg, batch)
+    full = softcap(tfm.logits_fn(params, cfg, h[:, off:]), cfg.logit_softcap)
+    last, _ = m.prefill(params, batch, max_len=12)
+    np.testing.assert_allclose(np.array(last), np.array(full[:, -1]),
+                               rtol=0.05, atol=5e-4)
+
+
+def test_vlm_prefix_is_bidirectional(key):
+    """PaliGemma: image-prefix tokens see each other; text stays causal."""
+    m = build_model("paligemma-3b", smoke=True)
+    cfg = m.cfg
+    params = m.init(key)
+    b = m.dummy_batch(key, batch=1, seq=16)
+    h1, _, off = tfm.forward_hidden(params, cfg, b)
+    # perturb the LAST patch: earlier-prefix outputs must change
+    b2 = dict(b)
+    b2["patches"] = b["patches"].at[:, -1].add(1.0)
+    h2, _, _ = tfm.forward_hidden(params, cfg, b2)
+    delta_first_patch = float(jnp.abs(h2[:, 0] - h1[:, 0]).max())
+    assert delta_first_patch > 0, "prefix should attend bidirectionally"
+
+
+def test_whisper_encoder_feeds_decoder(key):
+    m = build_model("whisper-small", smoke=True)
+    cfg = m.cfg
+    params = m.init(key)
+    b = m.dummy_batch(key, batch=1, seq=8)
+    h1, _, _ = tfm.forward_hidden(params, cfg, b)
+    b2 = dict(b)
+    b2["frames"] = b["frames"] + 1.0
+    h2, _, _ = tfm.forward_hidden(params, cfg, b2)
+    assert float(jnp.abs(h2 - h1).max()) > 0, "cross-attention inactive"
+
+
+def test_moe_router_balance_loss_positive(key):
+    m = build_model("mixtral-8x7b", smoke=True)
+    params = m.init(key)
+    b = m.dummy_batch(key, batch=2, seq=16)
+    _, metrics = m.loss(params, b)
+    assert float(metrics["aux_loss"]) > 0
+
+
+def test_sliding_window_blocks_long_range(key):
+    """h2o-danube (SWA): token at position T is independent of tokens
+    more than `window` positions back."""
+    m = build_model("h2o-danube-3-4b", smoke=True)
+    cfg = m.cfg                       # reduced window = 64 > seq 24 here,
+    from dataclasses import replace   # shrink it to test the mask
+    from repro.models.model import Model
+    m = Model(replace(cfg, window=4))
+    params = m.init(key)
+    b = m.dummy_batch(key, batch=1, seq=20)
+    h1, _, _ = tfm.forward_hidden(params, m.cfg, b)
+    toks = b["tokens"].at[:, 0].set((b["tokens"][:, 0] + 7)
+                                    % m.cfg.vocab_size)
+    h2, _, _ = tfm.forward_hidden(params, m.cfg, {**b, "tokens": toks})
+    # with 2 layers x window 4, receptive field ends well before pos 19
+    assert float(jnp.abs(h2[:, -1] - h1[:, -1]).max()) < 1e-5
+
+
+def test_rwkv_state_decode_is_constant_memory(key):
+    """RWKV6 decode state does not grow with sequence length."""
+    m = build_model("rwkv6-1.6b", smoke=True)
+    params = m.init(key)
+    c8 = m.init_cache(params, batch=1, max_len=8)
+    c512 = m.init_cache(params, batch=1, max_len=512)
+    n8 = sum(x.size for x in jax.tree.leaves(c8))
+    n512 = sum(x.size for x in jax.tree.leaves(c512))
+    assert n8 == n512

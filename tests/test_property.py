@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CloudTopology, CostModel, ReputationState,
+                        cost_trustfl_aggregate, ema_update, fltrust,
+                        gradient_contribution, normalize_scores,
+                        select_clients, trusted_aggregate)
+
+settings.register_profile("prop", max_examples=25, deadline=None)
+settings.load_profile("prop")
+
+
+@given(n=st.integers(2, 20), seed=st.integers(0, 10))
+def test_reputation_simplex_invariant(n, seed):
+    """Normalized scores always lie on the simplex; EMA preserves it."""
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(np.abs(rng.normal(size=n)).astype(np.float32))
+    r = normalize_scores(phi)
+    assert float(r.sum()) == np.float32(1.0) or abs(float(r.sum()) - 1) < 1e-5
+    assert (np.array(r) >= 0).all()
+    st_ = ReputationState.init(n)
+    st2 = ema_update(st_, r, gamma=0.7)
+    assert abs(float(st2.ema.sum()) - 1) < 1e-5
+
+
+@given(n=st.integers(1, 30), m=st.integers(1, 30), seed=st.integers(0, 5),
+       lam=st.floats(0.0, 1.0))
+def test_selection_cardinality_and_monotonicity(n, m, seed, lam):
+    rng = np.random.default_rng(seed)
+    rep = rng.random(n)
+    costs = rng.choice([0.01, 0.09], n)
+    sel = select_clients(rep, costs, m, cost_lambda=lam)
+    assert sel.sum() == min(m, n)
+    # monotonicity: every selected client has ratio >= every unselected
+    ratio = rep / costs ** lam
+    if sel.sum() < n:
+        assert ratio[sel].min() >= ratio[~sel].max() - 1e-12
+
+
+@given(k=st.integers(1, 5), npc=st.integers(1, 10), d=st.integers(1, 1000),
+       seed=st.integers(0, 5))
+def test_cost_hierarchical_never_exceeds_flat_or_bound(k, npc, d, seed):
+    rng = np.random.default_rng(seed)
+    topo = CloudTopology.even(k, npc)
+    cm = CostModel()
+    sel = rng.random(k * npc) < 0.7
+    sel[0] = True
+    hier = cm.round_cost(topo, sel, d, hierarchical=True)
+    bound = cm.full_participation_cost(topo, d)
+    assert hier <= bound + 1e-12
+    assert hier >= 0
+
+
+@given(n=st.integers(2, 12), d=st.integers(2, 64), seed=st.integers(0, 8))
+def test_trusted_aggregate_in_convex_hull(n, d, seed):
+    """Eq. 13 output is a convex combination: bounded by row extremes."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ts = jnp.asarray(np.abs(rng.normal(size=n)).astype(np.float32)) + 0.01
+    out = np.array(trusted_aggregate(g, ts))
+    assert (out <= np.array(g).max(axis=0) + 1e-4).all()
+    assert (out >= np.array(g).min(axis=0) - 1e-4).all()
+
+
+@given(seed=st.integers(0, 10), scale=st.floats(2.0, 1000.0))
+def test_fltrust_norm_bounded_by_reference(seed, scale):
+    """Eq. 12 invariant: no attacker scaling can push the aggregate norm
+    beyond the reference norm."""
+    rng = np.random.default_rng(seed)
+    ref = rng.normal(size=32).astype(np.float32)
+    g = np.stack([ref + 0.1 * rng.normal(size=32) for _ in range(6)])
+    g[0] *= scale                     # scaling attack
+    out = np.array(fltrust(jnp.asarray(g), jnp.asarray(ref)))
+    assert np.linalg.norm(out) <= np.linalg.norm(ref) * 1.05
+
+
+@given(seed=st.integers(0, 10))
+def test_aggregation_permutation_equivariance(seed):
+    """Permuting clients permutes reputations and leaves the update
+    unchanged (cloud structure held fixed)."""
+    rng = np.random.default_rng(seed)
+    n, d, k = 6, 24, 2
+    u = rng.normal(size=(n, d)).astype(np.float32)
+    refs = rng.normal(size=(k, d)).astype(np.float32)
+    cloud = np.repeat(np.arange(k), n // k)
+    perm = rng.permutation(n // k)    # permute within cloud 0
+    full_perm = np.concatenate([perm, np.arange(n // k, n)])
+
+    def agg(mat):
+        res = cost_trustfl_aggregate(
+            jnp.asarray(mat), jnp.asarray(mat[:, :8]), jnp.asarray(refs),
+            jnp.asarray(refs[:, :8]), jnp.asarray(cloud),
+            jnp.ones(n, bool), ReputationState.init(n))
+        return np.array(res.update), np.array(res.trust)
+
+    up1, ts1 = agg(u)
+    up2, ts2 = agg(u[full_perm])
+    np.testing.assert_allclose(up1, up2, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(ts1[full_perm], ts2, rtol=2e-4, atol=2e-5)
+
+
+@given(n=st.integers(2, 10), d=st.integers(2, 32), c=st.floats(0.1, 10.0),
+       seed=st.integers(0, 5))
+def test_gradient_contribution_scale_equivariance(n, d, c, seed):
+    """φ(c·G) = c·φ(G): Eq. 7 is 1-homogeneous (cos invariant, ‖·‖ linear)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    p1 = np.array(gradient_contribution(g)) * c
+    p2 = np.array(gradient_contribution(g * c))
+    np.testing.assert_allclose(p1, p2, rtol=2e-3, atol=1e-5)

@@ -1,0 +1,101 @@
+"""Baseline robust aggregators + attack transforms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (apply_update_attack, coordinate_median, fedavg,
+                        flip_labels, fltrust, gaussian_attack, krum,
+                        scaling_attack, sign_flip_attack, trimmed_mean)
+
+
+def _updates(n=10, d=32, outliers=3, scale=100.0, seed=0):
+    rng = np.random.default_rng(seed)
+    honest_dir = rng.normal(size=d)
+    u = honest_dir + 0.1 * rng.normal(size=(n, d))
+    u[:outliers] = scale * rng.normal(size=(outliers, d))
+    return jnp.asarray(u, jnp.float32), honest_dir
+
+
+def test_fedavg_is_mean():
+    u = jnp.arange(12.0).reshape(3, 4)
+    assert np.allclose(np.array(fedavg(u)), np.arange(12).reshape(3, 4)
+                       .mean(0))
+
+
+def test_fedavg_weighted():
+    u = jnp.array([[0.0, 0.0], [1.0, 1.0]])
+    out = fedavg(u, weights=jnp.array([1.0, 3.0]))
+    assert np.allclose(np.array(out), [0.75, 0.75])
+
+
+def test_krum_rejects_outliers():
+    u, honest = _updates()
+    out = np.array(krum(u, n_malicious=3))
+    cos = out @ honest / (np.linalg.norm(out) * np.linalg.norm(honest))
+    assert cos > 0.9
+
+
+def test_trimmed_mean_bounds_outliers():
+    u, honest = _updates()
+    out = np.array(trimmed_mean(u, trim_frac=0.3))
+    assert np.linalg.norm(out) < 5 * np.linalg.norm(honest)
+
+
+def test_median_robust_to_half_minus_one():
+    u, honest = _updates(n=11, outliers=5, scale=1e6)
+    out = np.array(coordinate_median(u))
+    assert np.linalg.norm(out) < 10 * np.linalg.norm(honest)
+
+
+def test_fltrust_zeroes_antialigned():
+    ref = jnp.ones(16)
+    u = jnp.stack([jnp.ones(16), -jnp.ones(16), 2 * jnp.ones(16)])
+    out = np.array(fltrust(u, ref))
+    # normalized to ref norm, anti-aligned excluded
+    assert np.allclose(out, np.ones(16), atol=1e-5)
+
+
+# --- attacks -----------------------------------------------------------------
+
+def test_label_flip_changes_only_masked():
+    key = jax.random.PRNGKey(0)
+    y = jnp.arange(10) % 5
+    mask = jnp.array([True] * 5 + [False] * 5)
+    y2 = flip_labels(y, 5, mask, key)
+    assert (np.array(y2[5:]) == np.array(y[5:])).all()
+    assert (np.array(y2[:5]) != np.array(y[:5])).all()   # offset in [1, C)
+
+
+def test_sign_flip_negates_malicious_rows():
+    u = jnp.ones((4, 8))
+    mal = jnp.array([True, False, True, False])
+    out = np.array(sign_flip_attack(u, mal))
+    assert (out[0] == -1).all() and (out[1] == 1).all()
+
+
+def test_scaling_attack_amplifies():
+    u = jnp.ones((2, 4))
+    out = np.array(scaling_attack(u, jnp.array([True, False]), scale=10.0))
+    assert (out[0] == 10).all() and (out[1] == 1).all()
+
+
+def test_gaussian_attack_adds_noise_only_to_malicious():
+    key = jax.random.PRNGKey(1)
+    u = jnp.zeros((3, 100))
+    mal = jnp.array([True, False, False])
+    out = np.array(gaussian_attack(u, mal, key, sigma=1.0))
+    assert np.abs(out[0]).std() > 0.5
+    assert (out[1:] == 0).all()
+
+
+def test_apply_update_attack_dispatch():
+    key = jax.random.PRNGKey(0)
+    u = jnp.ones((2, 4))
+    mal = jnp.array([True, False])
+    for name in ("none", "label_flip"):
+        assert (np.array(apply_update_attack(name, u, mal, key)) == 1).all()
+    assert (np.array(apply_update_attack("sign_flip", u, mal, key))[0]
+            == -1).all()
+    with pytest.raises(ValueError):
+        apply_update_attack("bogus", u, mal, key)
