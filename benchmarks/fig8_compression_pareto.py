@@ -1,0 +1,54 @@
+"""Fig. 8 (beyond the paper): accuracy-vs-$ Pareto sweep over gradient
+compression.
+
+Sweeps ``compress_ratio`` for top-k (cross-cloud-only policy) plus one
+QSGD point, for Cost-TrustFL vs FedAvg, and reports final accuracy, $
+cost and the intra/cross wire-byte split — the cost-accuracy trade-off
+the paper never ran. The acceptance gate for the subsystem lives here:
+top-k at ratio 0.1 must cut cross-cloud bytes >= 5x with accuracy within
+3 points of the uncompressed run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+from repro.configs.base import FLConfig
+from repro.federated import make_data, run_simulation
+from benchmarks.common import emit
+
+
+def run(rounds: int = 8, seed: int = 0) -> dict:
+    fl = FLConfig(attack="label_flip", malicious_frac=0.3, n_clouds=3,
+                  clients_per_cloud=6, clients_per_round=9,
+                  local_epochs=1, local_batch=16, ref_samples=32)
+    data = make_data(fl, "cifar10", seed)
+    sweep = [("none", None), ("topk", 0.25), ("topk", 0.1), ("topk", 0.05),
+             ("qsgd", None)]
+    out = {}
+    for method in ("cost_trustfl", "fedavg"):
+        for comp, ratio in sweep:
+            cfg = replace(fl, compressor=comp, link_policy="cross_only",
+                          compress_ratio=ratio if ratio is not None else 0.1)
+            tag = comp if ratio is None else f"{comp}{ratio}"
+            t0 = time.time()
+            r = run_simulation(cfg, method=method, rounds=rounds,
+                               eval_every=rounds, data=data, seed=seed)
+            out[(method, tag)] = r
+            emit(f"fig8/{method}/{tag}", (time.time() - t0) * 1e6,
+                 f"acc={r.final_accuracy:.4f};cost=${r.total_cost:.5f};"
+                 f"cross_MB={r.cross_bytes / 2**20:.2f};"
+                 f"intra_MB={r.intra_bytes / 2**20:.2f}")
+
+    base = out[("cost_trustfl", "none")]
+    tk = out[("cost_trustfl", "topk0.1")]
+    reduction = base.cross_bytes / max(tk.cross_bytes, 1.0)
+    acc_gap = base.final_accuracy - tk.final_accuracy
+    emit("fig8/criterion", 0.0,
+         f"cross_reduction={reduction:.2f}x;acc_gap={acc_gap:+.4f};"
+         f"pass={reduction >= 5.0 and abs(acc_gap) <= 0.03}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

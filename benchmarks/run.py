@@ -13,7 +13,7 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=12,
                     help="FL rounds per simulation benchmark")
     ap.add_argument("--only", type=str, default=None,
-                    help="comma list: table1,fig3,fig4,fig5,fig7,kernels")
+                    help="comma list: table1,fig3,fig4,fig5,fig7,fig8,kernels")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -41,6 +41,9 @@ def main() -> None:
     if want("fig7"):
         from benchmarks import fig7_lambda_table2
         fig7_lambda_table2.run(rounds=args.rounds)
+    if want("fig8"):
+        from benchmarks import fig8_compression_pareto
+        fig8_compression_pareto.run(rounds=args.rounds)
 
     print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
 

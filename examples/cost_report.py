@@ -10,9 +10,44 @@ import glob
 import json
 import os
 
-from repro.core import CostModel
+import numpy as np
+
+from repro.compress import build_link_policy
+from repro.core import CloudTopology, CostModel
 
 GB = 1024 ** 3
+MB = 1024 ** 2
+
+
+def fl_breakdown(n_clouds: int = 3, clients_per_cloud: int = 30,
+                 d_params: int = 600_000) -> None:
+    """Per-round intra/cross wire bytes + $ for the simulation topology
+    under each compression policy (CostModel.bytes_per_round)."""
+    topo = CloudTopology.even(n_clouds, clients_per_cloud)
+    cm = CostModel()
+    sel = np.ones(topo.n_clients, bool)
+    policies = [
+        ("fp32 / none", build_link_policy("none")),
+        ("topk 0.1 / cross_only", build_link_policy("topk", ratio=0.1)),
+        ("topk 0.1 / all", build_link_policy("topk", ratio=0.1,
+                                             link_policy="all")),
+        ("qsgd 5-bit / cross_only", build_link_policy("qsgd", levels=15)),
+    ]
+    print(f"\nFL round wire breakdown ({n_clouds}x{clients_per_cloud} "
+          f"clients, d={d_params:,}, full participation, hierarchical):")
+    print(f"{'policy':26s}{'intra MB':>10s}{'cross MB':>10s}"
+          f"{'$/round':>10s}{'cross vs fp32':>15s}")
+    print("-" * 71)
+    base_cross = None
+    for name, lp in policies:
+        client, edge = lp.payload_vectors(topo, d_params)
+        b = cm.bytes_per_round(topo, sel, d_params, client_payload=client,
+                               edge_payload=edge)
+        dollars = cm.round_cost(topo, sel, d_params, client_payload=client,
+                                edge_payload=edge)
+        base_cross = base_cross if base_cross is not None else b["cross"]
+        print(f"{name:26s}{b['intra'] / MB:10.2f}{b['cross'] / MB:10.2f}"
+              f"{dollars:10.6f}{base_cross / max(b['cross'], 1):14.2f}x")
 
 
 def main() -> None:
@@ -48,6 +83,8 @@ def main() -> None:
           "full-gradient all-reduce INSIDE each pod; only the K cloud "
           "aggregates cross the pod boundary (Eq. 5-6) — compare "
           "cross-pod vs intra columns.")
+
+    fl_breakdown()
 
 
 if __name__ == "__main__":

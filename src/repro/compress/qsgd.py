@@ -1,0 +1,60 @@
+"""QSGD-style stochastic quantization codec (linf-scaled, unbiased).
+
+Per update: levels q ∈ [-L, L] with q = sign(x)·floor(|x|/s·L + u),
+s = max|x|, u ~ U[0,1) — so E[decode(encode(x))] = x exactly
+(stochastic rounding is unbiased coordinate-wise). Wire format: a
+4-byte fp32 scale plus D entries packed at ceil(log2(2L+1)) bits each.
+L = 15 → 5 bits/coordinate → 6.4x below fp32.
+
+The server wraps every non-identity codec — this one included — in
+error feedback (``ef_step``); for an unbiased codec the residual is
+zero-mean rounding noise, so EF only tightens the variance while the
+expectation guarantee above does the heavy lifting.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.base import (Codec, CompressedUpdate, FP32_BYTES,
+                                 register_codec)
+from repro.kernels import ops, ref
+
+Array = jax.Array
+
+
+@register_codec("qsgd")
+@dataclass(frozen=True)
+class QSGDCodec(Codec):
+    """Stochastic quantization to 2·levels+1 states per coordinate."""
+    levels: int = 15
+    name = "qsgd"
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+    @property
+    def bits_per_coord(self) -> int:
+        return max(1, math.ceil(math.log2(2 * self.levels + 1)))
+
+    def payload_bytes(self, d: int) -> int:
+        return FP32_BYTES + math.ceil(d * self.bits_per_coord / 8)
+
+    def encode(self, x: Array, key: Array) -> CompressedUpdate:
+        scale = jnp.max(jnp.abs(x), axis=1)                    # (N,)
+        noise = jax.random.uniform(key, x.shape)
+        q = ops.stochastic_quantize(x, scale, noise, levels=self.levels)
+        return CompressedUpdate("qsgd", {"q": q, "scale": scale},
+                                tuple(x.shape),
+                                self.payload_bytes(x.shape[1]))
+
+    def decode(self, c: CompressedUpdate) -> Array:
+        return ref.dequantize_ref(c.data["q"], c.data["scale"], self.levels)
+
+    def roundtrip(self, x: Array, key: Array) -> Array:
+        c = self.encode(x, key)
+        return self.decode(c).astype(x.dtype)

@@ -1,0 +1,69 @@
+"""Top-k sparsification codec (error feedback applied by the caller).
+
+Wire format per update: a 4-byte length header, then k (value, index)
+pairs — fp16 value + int32 index — so the exact payload is
+``4 + 6k`` bytes against ``4D`` uncompressed. At ratio 0.1 that is a
+6.6x reduction on the wire.
+
+The hot path (``roundtrip``) uses the fused Pallas threshold+mask kernel
+and returns the dense decompressed form directly; values pass through
+fp16 so the round-trip distortion matches the wire format exactly (the
+error-feedback residual absorbs it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.base import Codec, CompressedUpdate, register_codec
+from repro.kernels import ops
+
+Array = jax.Array
+
+_HEADER_BYTES = 4      # entry count
+_VALUE_BYTES = 2       # fp16 value
+_INDEX_BYTES = 4       # int32 position
+
+
+@register_codec("topk")
+@dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Keep the ``ratio`` fraction of largest-magnitude entries per row."""
+    ratio: float = 0.1
+    name = "topk"
+
+    @property
+    def is_identity(self) -> bool:
+        return self.ratio >= 1.0
+
+    def k_for(self, d: int) -> int:
+        return max(1, min(d, int(round(self.ratio * d))))
+
+    def payload_bytes(self, d: int) -> int:
+        if self.is_identity:
+            return super().payload_bytes(d)
+        return _HEADER_BYTES + self.k_for(d) * (_VALUE_BYTES + _INDEX_BYTES)
+
+    def encode(self, x: Array, key: Array) -> CompressedUpdate:
+        k = self.k_for(x.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(x), k)                  # (N, k)
+        vals = jnp.take_along_axis(x, idx, axis=1).astype(jnp.float16)
+        return CompressedUpdate("topk", {"values": vals, "indices": idx},
+                                tuple(x.shape),
+                                self.payload_bytes(x.shape[1]))
+
+    def decode(self, c: CompressedUpdate) -> Array:
+        n, d = c.shape
+        out = jnp.zeros((n, d), jnp.float32)
+        rows = jnp.arange(n)[:, None]
+        return out.at[rows, c.data["indices"]].set(
+            c.data["values"].astype(jnp.float32))
+
+    def roundtrip(self, x: Array, key: Array) -> Array:
+        if self.is_identity:
+            return x
+        masked = ops.topk_mask(x, k=self.k_for(x.shape[1]))
+        # match the fp16 wire precision of the values
+        return masked.astype(jnp.float16).astype(x.dtype)

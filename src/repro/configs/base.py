@@ -176,6 +176,11 @@ class FLConfig:
     dirichlet_alpha: float = 0.5
     aggregator: str = "cost_trustfl"     # or fedavg|krum|trimmed_mean|median|fltrust
     sketch_dim: int = 128                # fused-strategy lm-head grad sketch
+    # gradient compression (repro.compress)
+    compressor: str = "none"             # none|topk|qsgd
+    compress_ratio: float = 0.1          # top-k kept fraction
+    qsgd_levels: int = 15                # QSGD states = 2*levels+1 (5 bits)
+    link_policy: str = "cross_only"      # none|cross_only|intra_only|all
 
 
 _ARCHES: Dict[str, ModelConfig] = {}

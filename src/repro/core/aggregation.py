@@ -4,7 +4,7 @@ implementation that the distributed train step mirrors with collectives.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +37,18 @@ def cost_trustfl_aggregate(
     *,
     gamma: float = 0.9,
     eps: float = 1e-12,
+    cloud_transform: Optional[Callable[[Array], Array]] = None,
 ) -> AggregationResult:
     """Full Eq. 5–13 pipeline with a two-level (intra-cloud, cross-cloud)
-    hierarchy. Non-selected clients are masked out of every sum."""
+    hierarchy. Non-selected clients are masked out of every sum.
+
+    ``cloud_transform`` models the edge→global wire: it is applied to the
+    (K, D) per-cloud aggregates after the intra-cloud phase, BEFORE the
+    receiver-side zero-trust fallback and the Eq. 6 combine
+    (repro.compress passes the per-link codec round-trip here, so the
+    global aggregator only ever sees what actually crossed the cloud
+    boundary — and rows it discards in favour of its own reference are
+    replaced with the clean, never-transmitted reference)."""
     n, d = updates.shape
     k = ref_updates.shape[0]
     selected = selected.astype(updates.dtype)                      # (N,)
@@ -75,6 +84,11 @@ def cost_trustfl_aggregate(
     ts_cloud = onehot.T @ ts                                        # (K,)
     weighted = g_tilde * ts[:, None]
     cloud_aggs = onehot.T @ weighted / jnp.maximum(ts_cloud, eps)[:, None]
+    # edge -> global wire (compression) happens on the transmitted
+    # aggregates; the zero-trust fallback below is receiver-side and
+    # therefore uses the uncompressed local reference
+    if cloud_transform is not None:
+        cloud_aggs = cloud_transform(cloud_aggs)
     # empty/zero-trust clouds fall back to their reference update
     cloud_aggs = jnp.where((ts_cloud > eps)[:, None], cloud_aggs, ref_updates)
 

@@ -1,18 +1,37 @@
-"""Communication cost model (paper §III-C, Eq. 1–3).
+"""Communication cost model (paper §III-C, Eq. 1–3) with byte-exact
+per-link payloads.
 
 Costs are expressed in $ per round for a model of ``d`` parameters at
 ``bytes_per_param`` (default fp32 upload, matching the paper's setup).
-Prices are $/GB; AWS-style egress defaults are in FLConfig.
+Prices are $/GB; AWS-style egress defaults are in FLConfig. When
+``repro.compress`` is active, the per-link payload overrides
+(``client_payload`` bytes per client uplink, ``edge_payload`` bytes per
+edge→global uplink) replace the fp32 default, so the $ figures track the
+actual wire traffic of compressed runs.
+
+All per-cloud reductions are numpy segment ops (``np.bincount``) — no
+Python loops over clouds, so the model stays O(N + K) at any topology
+size.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.fl_types import CloudTopology
 
 _GB = 1024.0 ** 3
+
+PayloadLike = Union[None, int, float, np.ndarray]
+
+
+def _as_payload(payload: PayloadLike, n: int, default: float) -> np.ndarray:
+    """Broadcast a scalar/array payload spec to a float64 (n,) vector."""
+    if payload is None:
+        return np.full(n, default, np.float64)
+    return np.broadcast_to(np.asarray(payload, np.float64), (n,)).copy()
 
 
 @dataclass(frozen=True)
@@ -27,6 +46,12 @@ class CostModel:
         same = topo.cloud_of == topo.aggregator_cloud
         return np.where(same, self.c_intra, self.c_cross)
 
+    def _edge_prices(self, topo: CloudTopology) -> np.ndarray:
+        """(K,) $/GB of each cloud's edge→global uplink."""
+        prices = np.full(topo.n_clouds, self.c_cross, np.float64)
+        prices[topo.aggregator_cloud] = self.c_intra
+        return prices
+
     def hierarchical_unit_costs(self, topo: CloudTopology) -> np.ndarray:
         """Marginal per-client cost under HIERARCHICAL aggregation: every
         client uploads intra-cloud to its edge aggregator; the single
@@ -35,16 +60,53 @@ class CostModel:
         itself — near-uniform, so selection stays reputation-driven and
         clouds are not starved (the cost saving comes from the hierarchy,
         not from abandoning remote clouds)."""
-        out = np.full(topo.n_clients, self.c_intra, np.float64)
-        for k in range(topo.n_clouds):
-            ix = topo.clients_in(k)
-            edge_price = (self.c_intra if k == topo.aggregator_cloud
-                          else self.c_cross)
-            out[ix] += edge_price / max(len(ix), 1)
-        return out
+        sizes = np.bincount(topo.cloud_of, minlength=topo.n_clouds)
+        amortized = self._edge_prices(topo) / np.maximum(sizes, 1)
+        return self.c_intra + amortized[topo.cloud_of]
+
+    def round_bytes(self, topo: CloudTopology, selected: np.ndarray,
+                    d_params: int, *, hierarchical: bool = True,
+                    client_payload: PayloadLike = None,
+                    edge_payload: PayloadLike = None
+                    ) -> Tuple[float, float]:
+        """Exact (intra_bytes, cross_bytes) on the wire for one round.
+
+        ``client_payload``: bytes of one client uplink — scalar or (N,);
+        defaults to ``bytes_per_param * d_params`` (fp32).
+        ``edge_payload``: bytes of one edge→global uplink — scalar or
+        (K,); hierarchical path only. The aggregator cloud's edge uplink
+        is co-located, so its bytes count as *intra* traffic.
+        """
+        full = float(self.bytes_per_param) * d_params
+        sel = np.asarray(selected, bool)
+        cp = _as_payload(client_payload, topo.n_clients, full)
+        if not hierarchical:
+            same = topo.cloud_of == topo.aggregator_cloud
+            return (float(cp[sel & same].sum()),
+                    float(cp[sel & ~same].sum()))
+        intra = float(cp[sel].sum())                 # client -> edge
+        active = np.bincount(topo.cloud_of[sel],
+                             minlength=topo.n_clouds) > 0
+        ep = _as_payload(edge_payload, topo.n_clouds, full) * active
+        cross = float(ep.sum() - ep[topo.aggregator_cloud])
+        intra += float(ep[topo.aggregator_cloud])
+        return intra, cross
+
+    def bytes_per_round(self, topo: CloudTopology, selected: np.ndarray,
+                        d_params: int, *, hierarchical: bool = True,
+                        client_payload: PayloadLike = None,
+                        edge_payload: PayloadLike = None
+                        ) -> Dict[str, float]:
+        """Intra/cross breakdown of one round's traffic, in bytes."""
+        intra, cross = self.round_bytes(
+            topo, selected, d_params, hierarchical=hierarchical,
+            client_payload=client_payload, edge_payload=edge_payload)
+        return {"intra": intra, "cross": cross, "total": intra + cross}
 
     def round_cost(self, topo: CloudTopology, selected: np.ndarray,
-                   d_params: int, hierarchical: bool = True) -> float:
+                   d_params: int, hierarchical: bool = True, *,
+                   client_payload: PayloadLike = None,
+                   edge_payload: PayloadLike = None) -> float:
         """$ cost of one round (Eq. 1 flat, or the hierarchical variant).
 
         ``selected``: boolean (N,) participation mask.
@@ -53,17 +115,10 @@ class CostModel:
         client sends ONE cross-cloud aggregate (clouds co-located with the
         global aggregator pay intra).
         """
-        gb = d_params * self.bytes_per_param / _GB
-        sel = np.asarray(selected, bool)
-        if not hierarchical:
-            c = self.client_unit_costs(topo)
-            return float(gb * c[sel].sum())
-        cost = gb * self.c_intra * sel.sum()          # client -> edge
-        for k in range(topo.n_clouds):
-            if sel[topo.clients_in(k)].any():
-                price = self.c_intra if k == topo.aggregator_cloud else self.c_cross
-                cost += gb * price                     # edge -> global
-        return float(cost)
+        intra_b, cross_b = self.round_bytes(
+            topo, selected, d_params, hierarchical=hierarchical,
+            client_payload=client_payload, edge_payload=edge_payload)
+        return float((intra_b * self.c_intra + cross_b * self.c_cross) / _GB)
 
     def full_participation_cost(self, topo: CloudTopology, d_params: int) -> float:
         """Eq. 3 upper bound: Σ_k n_k·d·C_intra + K·d·C_cross."""

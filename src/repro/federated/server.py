@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.compress import ef_step, policy_from_flcfg
 from repro.configs.base import FLConfig
 from repro.core import (CloudTopology, CostModel, ReputationState,
                         apply_update_attack, cost_trustfl_aggregate,
@@ -70,6 +71,13 @@ class FLServer:
         self._extract_ll = _last_layer_slice(self.params)
         self._poisoned_y = self._poison_labels()
         self.history: List[RoundMetrics] = []
+        # per-link gradient compression (repro.compress): codec per link
+        # class, lazy error-feedback residual buffers per sender
+        self.link_policy = policy_from_flcfg(self.flcfg)
+        self._res_client: Optional[Array] = None    # (N, D) client uplinks
+        self._res_edge: Optional[Array] = None      # (K, D) edge uplinks
+        self.cum_intra_bytes = 0.0
+        self.cum_cross_bytes = 0.0
         # jit the hot paths ONCE (re-tracing per round dominates runtime
         # on CPU otherwise)
         fl = self.flcfg
@@ -118,6 +126,78 @@ class FLServer:
         return self._train_refs(self.params, jnp.asarray(self.data.ref_x),
                                 jnp.asarray(self.data.ref_y), key)
 
+    # -- per-link compression (repro.compress) ---------------------------------
+    def _ef_rows(self, codec, flat_sel: Array, sel_ix: np.ndarray,
+                 local_rows: np.ndarray, key: Array) -> Array:
+        """Error-feedback round-trip the given rows of the selected-update
+        matrix through ``codec``, persisting per-client residuals."""
+        if codec.is_identity or local_rows.size == 0:
+            return flat_sel
+        if self._res_client is None:
+            self._res_client = jnp.zeros(
+                (self.topo.n_clients, flat_sel.shape[1]), jnp.float32)
+        rows = jnp.asarray(sel_ix[local_rows])
+        x_hat, new_res = ef_step(codec, flat_sel[local_rows],
+                                 self._res_client[rows], key)
+        self._res_client = self._res_client.at[rows].set(new_res)
+        return flat_sel.at[jnp.asarray(local_rows)].set(x_hat)
+
+    def _compress_client_uplinks(self, flat_sel: Array, sel_ix: np.ndarray,
+                                 key: Array) -> Array:
+        """Apply each selected client's uplink codec. Under the hierarchy
+        every client→edge hop is intra-cloud; on the flat baseline path a
+        client's single hop is intra or cross by co-location."""
+        lp = self.link_policy
+        local = np.arange(sel_ix.size)
+        if self.method == "cost_trustfl":
+            return self._ef_rows(lp.intra, flat_sel, sel_ix, local, key)
+        same = self.topo.cloud_of[sel_ix] == self.topo.aggregator_cloud
+        flat_sel = self._ef_rows(lp.intra, flat_sel, sel_ix, local[same],
+                                 jax.random.fold_in(key, 0))
+        return self._ef_rows(lp.cross, flat_sel, sel_ix, local[~same],
+                             jax.random.fold_in(key, 1))
+
+    def _edge_transform(self, key: Array, sel: np.ndarray
+                        ) -> Optional[Callable]:
+        """Edge→global wire model for cost_trustfl_aggregate: round-trips
+        the (K, D) cloud aggregates through each cloud's uplink codec
+        (intra-class for the aggregator's own cloud, cross for the rest)
+        with error feedback on the edge residuals. Inactive clouds (no
+        selected clients — their aggregate row is the receiver-side
+        reference fallback, nothing crosses the wire) pass through
+        untouched and keep their residual, matching round_bytes which
+        bills them zero bytes."""
+        lp = self.link_policy
+        if not lp.any_active:
+            return None
+        is_agg = (jnp.arange(self.topo.n_clouds)
+                  == self.topo.aggregator_cloud)[:, None]
+        active = jnp.asarray(np.bincount(
+            self.topo.cloud_of[np.asarray(sel, bool)],
+            minlength=self.topo.n_clouds) > 0)[:, None]
+
+        def transform(cloud_aggs: Array) -> Array:
+            if self._res_edge is None:
+                self._res_edge = jnp.zeros_like(cloud_aggs)
+            y = cloud_aggs + self._res_edge
+            hat_cross = lp.cross.roundtrip(y, jax.random.fold_in(key, 3))
+            # identity roundtrips are free; "all" shares one codec object,
+            # so don't run it twice over the same rows
+            hat_intra = (hat_cross if lp.intra is lp.cross
+                         else lp.intra.roundtrip(y, jax.random.fold_in(key, 2)))
+            x_hat = jnp.where(is_agg, hat_intra, hat_cross)
+            out = jnp.where(active, x_hat, cloud_aggs)
+            self._res_edge = jnp.where(active, y - x_hat, self._res_edge)
+            return out
+
+        return transform
+
+    def _link_payloads(self, hierarchical: bool
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact wire bytes per client uplink (N,) and edge uplink (K,)."""
+        return self.link_policy.payload_vectors(self.topo, self.d_params,
+                                                hierarchical=hierarchical)
+
     # -- one round --------------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
         rng = np.random.default_rng(self.seed * 100003 + t)
@@ -139,15 +219,30 @@ class FLServer:
             self.flcfg.attack, flat_sel, mal_sel, key,
             sigma=self.flcfg.gaussian_sigma, scale=self.flcfg.attack_scale)
 
-        # scatter to full (N, D) with zeros for non-selected
         n = self.topo.n_clients
+        lp = self.link_policy
+        # does any client-uplink codec actually distort flat_sel? (under
+        # the hierarchy every client hop is intra; the default cross_only
+        # policy leaves them untouched)
+        client_wire_active = (not lp.intra.is_identity
+                              if self.method == "cost_trustfl"
+                              else lp.any_active)
+        if client_wire_active:
+            # client uplink wire: compress after the (sender-side) attack;
+            # everything downstream — trust, Shapley, aggregation — sees
+            # only the decompressed updates, incl. the last-layer slice
+            flat_sel = self._compress_client_uplinks(
+                flat_sel, sel_ix, jax.random.fold_in(key, 211))
+            ll_sel = self._extract_ll(jax.vmap(unravel)(flat_sel))
+        else:
+            ll_sel = self._extract_ll(upd_tree)
+            ll_sel = apply_update_attack(self.flcfg.attack, ll_sel, mal_sel,
+                                         key, sigma=self.flcfg.gaussian_sigma,
+                                         scale=self.flcfg.attack_scale)
+
+        # scatter to full (N, D) with zeros for non-selected
         flat = jnp.zeros((n, flat_sel.shape[1]), flat_sel.dtype
                          ).at[jnp.asarray(sel_ix)].set(flat_sel)
-        ll_sel = self._extract_ll(upd_tree)
-        mal3 = mal_sel
-        ll_sel = apply_update_attack(self.flcfg.attack, ll_sel, mal3, key,
-                                     sigma=self.flcfg.gaussian_sigma,
-                                     scale=self.flcfg.attack_scale)
         ll = jnp.zeros((n, ll_sel.shape[1]), ll_sel.dtype
                        ).at[jnp.asarray(sel_ix)].set(ll_sel)
 
@@ -158,13 +253,22 @@ class FLServer:
         delta = unravel(update_flat * self.flcfg.server_lr)
         self.params = jax.tree.map(lambda w, g: w - g, self.params, delta)
 
-        # cost accounting (Eq. 1 / Eq. 3 structure)
-        cost = self.cost_model.round_cost(self.topo, sel, self.d_params,
-                                          hierarchical=hierarchical)
+        # cost accounting (Eq. 1 / Eq. 3 structure) at exact wire bytes
+        client_payload, edge_payload = self._link_payloads(hierarchical)
+        intra_b, cross_b = self.cost_model.round_bytes(
+            self.topo, sel, self.d_params, hierarchical=hierarchical,
+            client_payload=client_payload, edge_payload=edge_payload)
+        cost = self.cost_model.round_cost(
+            self.topo, sel, self.d_params, hierarchical=hierarchical,
+            client_payload=client_payload, edge_payload=edge_payload)
         self.cum_cost += cost
+        self.cum_intra_bytes += intra_b
+        self.cum_cross_bytes += cross_b
         metrics = RoundMetrics(round=t, cost=cost, cum_cost=self.cum_cost,
                                selected=sel,
-                               reputation=np.array(self.rep.ema))
+                               reputation=np.array(self.rep.ema),
+                               extra={"intra_bytes": intra_b,
+                                      "cross_bytes": cross_b})
         self.history.append(metrics)
         return metrics
 
@@ -179,7 +283,9 @@ class FLServer:
             res = cost_trustfl_aggregate(
                 flat, ll, ref_flat, ref_ll,
                 jnp.asarray(self.topo.cloud_of), sel_j, self.rep,
-                gamma=self.flcfg.ema_gamma)
+                gamma=self.flcfg.ema_gamma,
+                cloud_transform=self._edge_transform(
+                    jax.random.fold_in(key, 223), sel))
             self.rep = res.reputation
             return res.update, True
         sel_ix = jnp.nonzero(sel_j, size=int(sel.sum()))[0]

@@ -21,10 +21,12 @@ class SimResult:
     attack: str
     accuracy: List[float]
     rounds: List[int]
-    final_accuracy: float
+    final_accuracy: Optional[float]   # None when no eval ran (rounds=0)
     total_cost: float
     reputation: Optional[np.ndarray] = None
     malicious: Optional[np.ndarray] = None
+    intra_bytes: float = 0.0          # cumulative wire bytes, intra-class
+    cross_bytes: float = 0.0          # cumulative wire bytes, cross-cloud
 
 
 def make_topology(flcfg: FLConfig) -> CloudTopology:
@@ -62,11 +64,19 @@ def run_simulation(flcfg: FLConfig, *, method: str = "cost_trustfl",
             if verbose:
                 print(f"[{method}/{flcfg.attack}] round {t+1:4d} "
                       f"acc={acc:.4f} cum_cost=${server.cum_cost:.4f}")
+    # rounds=0 yields no evals -> final_accuracy None. FLServer always
+    # carries rep today; the getattr keeps SimResult construction working
+    # for server implementations without reputation state.
+    rep = getattr(server, "rep", None)
     return SimResult(method=method, attack=flcfg.attack, accuracy=accs,
-                     rounds=ticks, final_accuracy=accs[-1],
+                     rounds=ticks,
+                     final_accuracy=accs[-1] if accs else None,
                      total_cost=server.cum_cost,
-                     reputation=np.array(server.rep.ema),
-                     malicious=server.malicious)
+                     reputation=(np.array(rep.ema) if rep is not None
+                                 else None),
+                     malicious=server.malicious,
+                     intra_bytes=server.cum_intra_bytes,
+                     cross_bytes=server.cum_cross_bytes)
 
 
 def compare_methods(flcfg: FLConfig, methods: List[str], *,

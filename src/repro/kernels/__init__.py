@@ -1,5 +1,6 @@
 """Pallas TPU kernels for the perf-critical hot spots (DESIGN.md §6):
-trust_score (Eq. 7+11), weighted_agg (Eq. 12+13), linear_scan (RG-LRU).
+trust_score (Eq. 7+11), weighted_agg (Eq. 12+13), linear_scan (RG-LRU),
+topk_mask + stochastic_quantize (repro.compress gradient codecs).
 Each has a pure-jnp oracle in ref.py; ops.py holds the jit'd wrappers."""
 from repro.kernels import ops, ref
 

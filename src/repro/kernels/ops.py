@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.linear_scan import linear_scan as _linear_scan
+from repro.kernels.quantize import stochastic_quantize as _stochastic_quantize
+from repro.kernels.topk_mask import topk_mask as _topk_mask
 from repro.kernels.trust_score import trust_score as _trust_score
 from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
 
@@ -41,3 +43,24 @@ def linear_scan(a: Array, b: Array, *, chunk: int = 32, block_b: int = 8,
     """Diagonal linear recurrence h_t = a_t*h_{t-1} + b_t over axis 1."""
     return _linear_scan(a, b, chunk=chunk, block_b=block_b,
                         interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "block_n", "block_d", "interpret"))
+def topk_mask(grads: Array, *, k: int, block_n: int = 8, block_d: int = 512,
+              interpret: bool = True) -> Array:
+    """Keep the k largest-|.| entries per row of (N, D), zero the rest
+    (dense decompressed form; ties at the threshold are kept)."""
+    thr = jax.lax.top_k(jnp.abs(grads), k)[0][:, -1]
+    return _topk_mask(grads, thr, block_n=block_n, block_d=block_d,
+                      interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("levels", "block_n", "block_d",
+                                   "interpret"))
+def stochastic_quantize(x: Array, scale: Array, noise: Array, *, levels: int,
+                        block_n: int = 8, block_d: int = 512,
+                        interpret: bool = True) -> Array:
+    """QSGD stochastic-rounding quantize to int32 levels in [-L, L]."""
+    return _stochastic_quantize(x, scale, noise, levels=levels,
+                                block_n=block_n, block_d=block_d,
+                                interpret=interpret)

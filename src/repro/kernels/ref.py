@@ -41,6 +41,29 @@ def weighted_agg_ref(grads: Array, ts: Array, norms: Array, ref_norm: Array,
     return out
 
 
+def topk_mask_ref(grads: Array, thr: Array) -> Array:
+    """Dense top-k sparsification: zero |G[i, d]| < thr[i] (ties kept)."""
+    t = thr.reshape(-1, 1).astype(grads.dtype)
+    return jnp.where(jnp.abs(grads) >= t, grads, jnp.zeros_like(grads))
+
+
+def stochastic_quantize_ref(x: Array, scale: Array, noise: Array,
+                            levels: int, eps: float = 1e-12) -> Array:
+    """QSGD stochastic rounding to int32 levels in [-levels, levels]:
+    q = sign(x)*floor(|x|/scale*L + u), so E_u[q*scale/L] = x."""
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(scale.reshape(-1, 1).astype(jnp.float32), eps)
+    v = xf / s * levels
+    xi = jnp.minimum(jnp.floor(jnp.abs(v) + noise.astype(jnp.float32)),
+                     float(levels))
+    return (jnp.sign(v) * xi).astype(jnp.int32)
+
+
+def dequantize_ref(q: Array, scale: Array, levels: int) -> Array:
+    """Inverse of stochastic_quantize_ref: x̂ = q * scale / L."""
+    return q.astype(jnp.float32) * scale.reshape(-1, 1) / levels
+
+
 def linear_scan_ref(a: Array, b: Array) -> Array:
     """h_t = a_t ⊙ h_{t-1} + b_t along axis 1 (h_0 = 0). (B, T, D)."""
     def combine(x, y):

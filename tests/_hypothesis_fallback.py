@@ -1,0 +1,81 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container that runs the tier-1 suite has no ``hypothesis`` wheel, so
+property-test modules import ``given/settings/st`` from here instead.
+When the real library is available it is re-exported unchanged; otherwise
+a minimal shim runs each ``@given`` test on ``max_examples`` examples
+drawn from a seeded generator (seed = hash of the test name), so results
+are reproducible run-to-run and machine-to-machine.
+
+Only the strategy surface the suite uses is implemented:
+``st.integers``, ``st.floats``, ``st.sampled_from``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+    class settings:  # noqa: N801
+        _profiles: dict = {}
+        _active: dict = {"max_examples": 20}
+
+        def __init__(self, **kwargs):
+            self._kwargs = kwargs
+
+        def __call__(self, fn):
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, max_examples=20, **_ignored):
+            cls._profiles[name] = {"max_examples": max_examples}
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = cls._profiles.get(name, cls._active)
+
+    def given(**strategies):
+        def decorate(fn):
+            # NB: deliberately not functools.wraps — pytest must see a
+            # zero-argument signature, or it treats the strategy params
+            # as fixtures.
+            def wrapper():
+                seed = zlib.adler32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(settings._active["max_examples"]):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            return wrapper
+        return decorate

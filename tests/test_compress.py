@@ -1,0 +1,172 @@
+"""repro.compress: codec invariants (EF telescoping, QSGD unbiasedness,
+exact wire bytes), per-link policy resolution, CostModel payload
+accounting, and the compressed end-to-end simulation path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.compress import (LinkPolicy, QSGDCodec, TopKCodec,
+                            build_link_policy, ef_step, make_codec)
+from repro.configs.base import FLConfig
+from repro.core import CloudTopology, CostModel
+
+settings.register_profile("compress", max_examples=15, deadline=None)
+settings.load_profile("compress")
+
+_FL = dict(n_clouds=3, clients_per_cloud=4, clients_per_round=6,
+           local_epochs=1, local_batch=16, ref_samples=32)
+
+
+# -- codec invariants ---------------------------------------------------------
+
+@given(n=st.sampled_from([1, 4]), d=st.sampled_from([32, 400]),
+       ratio=st.sampled_from([0.02, 0.1, 0.5]), seed=st.integers(0, 5))
+def test_topk_ef_residuals_telescope(n, d, ratio, seed):
+    """Error feedback loses nothing: Σ transmitted = Σ input - residual."""
+    codec = make_codec("topk", ratio=ratio)
+    key = jax.random.PRNGKey(seed)
+    res = jnp.zeros((n, d))
+    tot_x = jnp.zeros((n, d))
+    tot_hat = jnp.zeros((n, d))
+    for t in range(8):
+        xt = jax.random.normal(jax.random.fold_in(key, t), (n, d))
+        x_hat, res = ef_step(codec, xt, res, jax.random.fold_in(key, 50 + t))
+        tot_x = tot_x + xt
+        tot_hat = tot_hat + x_hat
+    np.testing.assert_allclose(np.array(tot_hat + res), np.array(tot_x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_qsgd_decompression_unbiased():
+    """E[decode(encode(x))] = x: the mean over independent noise draws
+    converges to the input at the Monte-Carlo rate."""
+    codec = make_codec("qsgd", levels=15)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 200))
+    draws = 200
+    acc = jnp.zeros_like(x)
+    for i in range(draws):
+        acc = acc + codec.roundtrip(x, jax.random.PRNGKey(100 + i))
+    err = np.abs(np.array(acc / draws - x)).max()
+    # per-coordinate quantization step is scale/L; MC error ~ step/sqrt(M)
+    step = float(jnp.max(jnp.abs(x))) / codec.levels
+    assert err < 5 * step / np.sqrt(draws)
+
+
+def test_topk_roundtrip_matches_structured_wire_form():
+    """The fused kernel path == decode(encode(.)) (dense scatter)."""
+    codec = TopKCodec(ratio=0.1)
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (5, 333))
+    rt = codec.roundtrip(x, key)
+    dec = codec.decode(codec.encode(x, key))
+    np.testing.assert_allclose(np.array(rt), np.array(dec),
+                               rtol=1e-3, atol=1e-3)
+    assert int((np.array(rt) != 0).sum(axis=1).max()) == codec.k_for(333)
+
+
+def test_payload_bytes_exact():
+    d = 1000
+    assert make_codec("none").payload_bytes(d) == 4 * d
+    tk = make_codec("topk", ratio=0.1)
+    assert tk.payload_bytes(d) == 4 + 100 * (2 + 4)      # hdr + k*(fp16+i32)
+    q = make_codec("qsgd", levels=15)                     # 31 states -> 5 bits
+    assert q.payload_bytes(d) == 4 + (d * 5 + 7) // 8
+    with pytest.raises(ValueError):
+        make_codec("zfp")
+
+
+def test_link_policy_resolution():
+    lp = build_link_policy("topk", ratio=0.1, link_policy="cross_only")
+    assert lp.intra.is_identity and not lp.cross.is_identity
+    lp = build_link_policy("qsgd", link_policy="all")
+    assert not lp.intra.is_identity and not lp.cross.is_identity
+    assert not build_link_policy("none", link_policy="all").any_active
+    assert not build_link_policy("topk", link_policy="none").any_active
+    with pytest.raises(ValueError):
+        build_link_policy("topk", link_policy="edge_only")
+
+
+# -- CostModel payload accounting ---------------------------------------------
+
+def test_round_bytes_with_payloads_matches_hand_count():
+    topo = CloudTopology.even(3, 4)                       # aggregator cloud 0
+    cm = CostModel()
+    sel = np.zeros(12, bool)
+    sel[[0, 1, 4, 8]] = True                              # clouds 0,0,1,2
+    client = np.full(12, 100.0)
+    edge = np.array([10.0, 20.0, 30.0])
+    intra, cross = cm.round_bytes(topo, sel, 1, client_payload=client,
+                                  edge_payload=edge)
+    assert intra == 4 * 100 + 10                          # uplinks + agg edge
+    assert cross == 20 + 30
+    # flat path: same-cloud clients are intra, the rest cross
+    intra_f, cross_f = cm.round_bytes(topo, sel, 1, hierarchical=False,
+                                      client_payload=client)
+    assert intra_f == 2 * 100 and cross_f == 2 * 100
+
+
+def test_bytes_per_round_defaults_to_fp32():
+    topo = CloudTopology.even(2, 3)
+    cm = CostModel()
+    sel = np.ones(6, bool)
+    b = cm.bytes_per_round(topo, sel, 1000)
+    assert b["intra"] == 6 * 4000 + 4000                  # + agg-cloud edge
+    assert b["cross"] == 4000
+    assert b["total"] == b["intra"] + b["cross"]
+
+
+# -- end-to-end compressed simulation -----------------------------------------
+
+@pytest.fixture(scope="module")
+def sim_data():
+    from repro.federated import make_data
+    fl = FLConfig(**_FL)
+    return make_data(fl, "cifar10", seed=0, n_samples=2000,
+                     samples_per_client=48)
+
+
+def test_compressed_simulation_converges_under_label_flip(sim_data):
+    """topk/cross_only run stays trainable under attack and cuts
+    cross-cloud bytes >= 5x vs the uncompressed run."""
+    from repro.federated import run_simulation
+    fl = FLConfig(attack="label_flip", malicious_frac=0.3, **_FL)
+    base = run_simulation(fl, method="cost_trustfl", rounds=3, eval_every=3,
+                          data=sim_data, seed=0)
+    flc = FLConfig(attack="label_flip", malicious_frac=0.3,
+                   compressor="topk", compress_ratio=0.1,
+                   link_policy="cross_only", **_FL)
+    comp = run_simulation(flc, method="cost_trustfl", rounds=3, eval_every=3,
+                          data=sim_data, seed=0)
+    assert 0.0 <= comp.final_accuracy <= 1.0
+    assert np.isfinite(comp.total_cost)
+    assert base.cross_bytes / comp.cross_bytes >= 5.0
+    assert comp.intra_bytes == base.intra_bytes       # intra left untouched
+    assert comp.total_cost < base.total_cost
+
+
+def test_flat_baseline_compresses_cross_clients_only(sim_data):
+    """fedavg (flat path): cross_only compresses remote clients' uplinks,
+    aggregator-cloud clients stay fp32."""
+    from repro.federated import FLServer, make_topology
+    fl = FLConfig(compressor="topk", compress_ratio=0.1,
+                  link_policy="cross_only", **_FL)
+    server = FLServer(fl, make_topology(fl), sim_data, method="fedavg",
+                      seed=0)
+    m = server.run_round(0)
+    d = server.d_params
+    sel = m.selected
+    same = server.topo.cloud_of == server.topo.aggregator_cloud
+    tk = server.link_policy.cross
+    assert m.extra["intra_bytes"] == 4 * d * (sel & same).sum()
+    assert m.extra["cross_bytes"] == tk.payload_bytes(d) * (sel & ~same).sum()
+
+
+def test_rounds_zero_returns_explicit_nones(sim_data):
+    from repro.federated import run_simulation
+    fl = FLConfig(**_FL)
+    r = run_simulation(fl, method="fedavg", rounds=0, data=sim_data, seed=0)
+    assert r.final_accuracy is None
+    assert r.accuracy == [] and r.rounds == []
+    assert r.total_cost == 0.0
