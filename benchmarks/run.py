@@ -13,7 +13,8 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=12,
                     help="FL rounds per simulation benchmark")
     ap.add_argument("--only", type=str, default=None,
-                    help="comma list: table1,fig3,fig4,fig5,fig7,fig8,kernels")
+                    help="comma list: table1,table1b,fig3,fig4,fig5,fig7,"
+                         "fig8,kernels")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -35,6 +36,9 @@ def main() -> None:
     if want("table1"):
         from benchmarks import table1_attacks
         table1_attacks.run(rounds=args.rounds)
+    if want("table1b"):
+        from benchmarks import table1_attacks
+        table1_attacks.run_adaptive(rounds=args.rounds)
     if want("fig4"):
         from benchmarks import fig4_robustness
         fig4_robustness.run(rounds=args.rounds)

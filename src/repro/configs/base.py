@@ -160,9 +160,10 @@ class FLConfig:
     clients_per_cloud: int = 30
     clients_per_round: int = 30          # m in Eq. 10
     malicious_frac: float = 0.3
-    attack: str = "none"                 # none|label_flip|gaussian|sign_flip|scaling
-    attack_scale: float = 10.0
+    attack: str = "none"                 # any repro.core.attacks.UPDATE_ATTACKS
+    attack_scale: float = 10.0           # sign_flip/scaling/ipm/collusion knob
     gaussian_sigma: float = 1.0
+    attack_z: float = 1.0                # ALIE mean − z·std evasion margin
     local_epochs: int = 5
     local_batch: int = 32
     lr: float = 0.01

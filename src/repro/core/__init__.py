@@ -10,9 +10,11 @@ Alg. 1   -> repro.core.aggregation (matrix form) /
             repro.federated.simulation (explicit-client form)
 """
 from repro.core.aggregation import AggregationResult, cost_trustfl_aggregate
-from repro.core.attacks import (ATTACKS, apply_update_attack, flip_labels,
-                                gaussian_attack, scaling_attack,
-                                sign_flip_attack)
+from repro.core.attacks import (ATTACKS, UPDATE_ATTACKS, alie_attack,
+                                apply_update_attack, collusion_attack,
+                                flip_labels, gaussian_attack, ipm_attack,
+                                min_max_attack, register_update_attack,
+                                scaling_attack, sign_flip_attack)
 from repro.core.cost import CostModel
 from repro.core.fl_types import CloudTopology, RoundMetrics
 from repro.core.reputation import ReputationState, ema_update, normalize_scores
@@ -27,8 +29,10 @@ from repro.core.trust import (cloud_trust, normalize_updates, trust_scores,
 
 __all__ = [
     "AggregationResult", "cost_trustfl_aggregate", "ATTACKS",
-    "apply_update_attack", "flip_labels", "gaussian_attack", "scaling_attack",
-    "sign_flip_attack", "CostModel", "CloudTopology", "RoundMetrics",
+    "UPDATE_ATTACKS", "register_update_attack", "apply_update_attack",
+    "flip_labels", "gaussian_attack", "scaling_attack", "sign_flip_attack",
+    "alie_attack", "ipm_attack", "min_max_attack", "collusion_attack",
+    "CostModel", "CloudTopology", "RoundMetrics",
     "ReputationState", "ema_update", "normalize_scores", "AGGREGATORS",
     "coordinate_median", "fedavg", "fltrust", "krum", "trimmed_mean",
     "select_clients", "select_clients_jax", "cosine_utility", "exact_shapley",

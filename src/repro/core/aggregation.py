@@ -53,10 +53,19 @@ def cost_trustfl_aggregate(
     k = ref_updates.shape[0]
     selected = selected.astype(updates.dtype)                      # (N,)
 
-    # --- Eq. 7: contribution vs. the mean of *selected* last-layer grads
+    # --- Eq. 7: contribution vs. the mean of *selected* last-layer grads.
+    # The raw ‖g‖ factor in Eq. 7 lets norm-inflating adversaries
+    # (scaling, gaussian noise — see repro.scenarios) FARM reputation, so
+    # the factor is damped past the median selected norm m: it decays as
+    # m²/‖g‖, leaving near-median honest clients untouched. The paper's
+    # verbatim score stays in repro.core.shapley.gradient_contribution.
     sel_sum = jnp.sum(selected)
     gbar = (selected @ last_layer) / jnp.maximum(sel_sum, 1.0)
-    phi = gradient_contribution(last_layer, gbar) * selected
+    norms = jnp.linalg.norm(last_layer, axis=1)
+    med = jnp.nanmedian(jnp.where(selected > 0, norms, jnp.nan))
+    damp = jnp.minimum(1.0, (med / jnp.maximum(norms, eps)) ** 2)
+    damp = jnp.where(jnp.isnan(damp), 1.0, damp)
+    phi = gradient_contribution(last_layer, gbar) * damp * selected
 
     # --- Eq. 8–9
     r = normalize_scores(phi)

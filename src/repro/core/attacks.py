@@ -1,11 +1,28 @@
-"""Poisoning attacks from the paper's threat model (§III-B, §V-A):
-label flipping (data-level), Gaussian noise, sign flipping, and scaling
-(update-level). Update-level attacks are jittable transforms of the
-malicious rows of an (N, D) update matrix.
+"""Poisoning attacks: the paper's threat model (§III-B, §V-A) plus the
+adaptive adversaries used by the scenario engine (`repro.scenarios`).
+
+Update-level attacks are jittable transforms of the malicious rows of an
+(N, D) update matrix, dispatched by name through ``UPDATE_ATTACKS`` so
+new adversaries plug into ``FLServer`` without touching the round loop.
+
+Static (paper Table I):
+  * ``label_flip``  — data-level (see :func:`flip_labels`); identity here
+  * ``gaussian``    — additive N(0, σ²) noise
+  * ``sign_flip``   — g ← −scale·g
+  * ``scaling``     — g ← scale·g (model replacement)
+
+Adaptive (out-of-paper extensions, after Baruch et al. "A Little Is
+Enough", Xie et al. IPM, Shejwalkar & Houmansadr min-max):
+  * ``alie``       — malicious rows hide at mean − z·std of honest rows
+  * ``ipm``        — inner-product manipulation: rows at −ε·mean(honest)
+  * ``min_max``    — largest perturbation that stays within the honest
+                     pairwise-distance envelope (bisection, jittable)
+  * ``collusion``  — colluders agree on one update (−scale · their mean)
+    so mutual similarity mimics consensus
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,38 +38,149 @@ def flip_labels(labels: Array, n_classes: int, mask: Array, key: Array) -> Array
     return jnp.where(mask, flipped, labels)
 
 
+def _row_mask(malicious: Array, ndim: int) -> Array:
+    return malicious.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _honest_moments(updates: Array, malicious: Array,
+                    eps: float = 1e-12) -> tuple[Array, Array]:
+    """Per-coordinate (mean, std) over the honest rows of (N, D)."""
+    w = (~malicious).astype(updates.dtype)[:, None]
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    mean = jnp.sum(updates * w, axis=0) / n
+    var = jnp.sum(((updates - mean) ** 2) * w, axis=0) / n
+    return mean, jnp.sqrt(jnp.maximum(var, eps * eps))
+
+
 def gaussian_attack(updates: Array, malicious: Array, key: Array,
                     sigma: float = 1.0) -> Array:
     """g_i += N(0, σ²) for malicious rows."""
     noise = sigma * jax.random.normal(key, updates.shape, updates.dtype)
-    m = malicious.reshape((-1,) + (1,) * (updates.ndim - 1))
-    return jnp.where(m, updates + noise, updates)
+    return jnp.where(_row_mask(malicious, updates.ndim),
+                     updates + noise, updates)
 
 
 def sign_flip_attack(updates: Array, malicious: Array, scale: float = 1.0) -> Array:
     """g_i ← −scale · g_i for malicious rows."""
-    m = malicious.reshape((-1,) + (1,) * (updates.ndim - 1))
-    return jnp.where(m, -scale * updates, updates)
+    return jnp.where(_row_mask(malicious, updates.ndim),
+                     -scale * updates, updates)
 
 
 def scaling_attack(updates: Array, malicious: Array, scale: float = 10.0) -> Array:
     """g_i ← scale · g_i (model-replacement style amplification)."""
-    m = malicious.reshape((-1,) + (1,) * (updates.ndim - 1))
-    return jnp.where(m, scale * updates, updates)
+    return jnp.where(_row_mask(malicious, updates.ndim),
+                     scale * updates, updates)
+
+
+def alie_attack(updates: Array, malicious: Array, z: float = 1.0) -> Array:
+    """A-little-is-enough: every malicious row moves to mean − z·std of
+    the honest rows — inside the per-coordinate envelope that outlier
+    filters (trimmed mean, Krum distances) treat as benign."""
+    mean, std = _honest_moments(updates, malicious)
+    return jnp.where(malicious[:, None], mean - z * std, updates)
+
+
+def ipm_attack(updates: Array, malicious: Array, scale: float = 2.0) -> Array:
+    """Inner-product manipulation: malicious rows submit −ε·mean(honest)
+    so the aggregate's inner product with the true descent direction
+    turns negative once ε·frac_malicious is large enough."""
+    mean, _ = _honest_moments(updates, malicious)
+    return jnp.where(malicious[:, None], -scale * mean, updates)
+
+
+def min_max_attack(updates: Array, malicious: Array, *, iters: int = 20,
+                   eps: float = 1e-12) -> Array:
+    """Min-max distance evasion (Shejwalkar & Houmansadr): malicious rows
+    sit at mean(honest) + γ·p with p = −mean/‖mean‖ and γ the largest
+    value (bisection) keeping the row's distance to every honest row
+    within the maximum honest pairwise distance."""
+    honest = ~malicious
+    w = honest.astype(updates.dtype)
+    mean, _ = _honest_moments(updates, malicious)
+    p = -mean / jnp.maximum(jnp.linalg.norm(mean), eps)
+
+    # pairwise honest distances via the Gram matrix — O(N^2) memory,
+    # never materializes an (N, N, D) tensor
+    sq = jnp.sum(updates * updates, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (updates @ updates.T)
+    d_max = jnp.sqrt(jnp.maximum(jnp.max(d2 * w[:, None] * w[None, :]), 0.0))
+
+    mean_sq = jnp.sum(mean * mean)
+    dot_up = updates @ p
+    dot_um = updates @ mean
+
+    def worst_dist(gamma):
+        # ||(mean + γp) - u_j||² expanded; masked to honest rows
+        cand_sq = mean_sq + 2.0 * gamma * (mean @ p) + gamma * gamma
+        d = cand_sq + sq - 2.0 * (dot_um + gamma * dot_up)
+        return jnp.sqrt(jnp.maximum(jnp.max(jnp.where(honest, d, -jnp.inf)),
+                                    0.0))
+
+    def body(carry, _):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ok = worst_dist(mid) <= d_max
+        return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)), None
+
+    zero = jnp.asarray(0.0, updates.dtype)
+    (gamma, _), _ = jax.lax.scan(body, (zero, 2.0 * d_max + eps),
+                                 None, length=iters)
+    return jnp.where(malicious[:, None], mean + gamma * p, updates)
+
+
+def collusion_attack(updates: Array, malicious: Array,
+                     scale: float = 1.0) -> Array:
+    """Collusion: every malicious row submits the same −scale·mean of the
+    colluders' true updates — pairwise-identical rows defeat similarity /
+    distance heuristics that assume attackers are outliers."""
+    w = malicious.astype(updates.dtype)
+    n_m = jnp.maximum(jnp.sum(w), 1.0)
+    mal_mean = (w @ updates) / n_m
+    return jnp.where(malicious[:, None], -scale * mal_mean, updates)
+
+
+# -- registry -----------------------------------------------------------------
+# Normalized signature: fn(updates, malicious, key, *, sigma, scale, z).
+# ``None`` marks names that are handled at the data level (or no-ops) so
+# the server's dispatch stays a single lookup. Each adapter forwards only
+# the knobs its attack reads.
+AttackFn = Callable[..., Array]
+
+UPDATE_ATTACKS: Dict[str, Optional[AttackFn]] = {}
+
+
+def register_update_attack(name: str, fn: Optional[AttackFn]) -> None:
+    UPDATE_ATTACKS[name] = fn
+
+
+register_update_attack("none", None)
+register_update_attack("label_flip", None)   # data level, see flip_labels
+register_update_attack(
+    "gaussian", lambda u, m, k, *, sigma, scale, z: gaussian_attack(u, m, k, sigma))
+register_update_attack(
+    "sign_flip", lambda u, m, k, *, sigma, scale, z: sign_flip_attack(u, m, scale))
+register_update_attack(
+    "scaling", lambda u, m, k, *, sigma, scale, z: scaling_attack(u, m, scale))
+register_update_attack(
+    "alie", lambda u, m, k, *, sigma, scale, z: alie_attack(u, m, z))
+register_update_attack(
+    "ipm", lambda u, m, k, *, sigma, scale, z: ipm_attack(u, m, scale))
+register_update_attack(
+    "min_max", lambda u, m, k, *, sigma, scale, z: min_max_attack(u, m))
+register_update_attack(
+    "collusion", lambda u, m, k, *, sigma, scale, z: collusion_attack(u, m, scale))
 
 
 def apply_update_attack(name: str, updates: Array, malicious: Array,
                         key: Array, *, sigma: float = 1.0,
-                        scale: float = 10.0) -> Array:
-    if name in ("none", "label_flip"):   # label_flip happens at data level
+                        scale: float = 10.0, z: float = 1.0) -> Array:
+    if name not in UPDATE_ATTACKS:
+        raise ValueError(f"unknown attack {name!r}; known: "
+                         f"{sorted(UPDATE_ATTACKS)}")
+    fn = UPDATE_ATTACKS[name]
+    if fn is None:
         return updates
-    if name == "gaussian":
-        return gaussian_attack(updates, malicious, key, sigma)
-    if name == "sign_flip":
-        return sign_flip_attack(updates, malicious, scale=1.0)
-    if name == "scaling":
-        return scaling_attack(updates, malicious, scale)
-    raise ValueError(f"unknown attack {name!r}")
+    return fn(updates, malicious, key, sigma=sigma, scale=scale, z=z)
 
 
-ATTACKS = ("none", "label_flip", "gaussian", "sign_flip", "scaling")
+ATTACKS = tuple(UPDATE_ATTACKS)

@@ -5,6 +5,7 @@ the same round loop so Table I / Fig. 2-4 comparisons are apples-to-apples.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -21,8 +22,31 @@ from repro.core import (CloudTopology, CostModel, ReputationState,
 from repro.core.fl_types import RoundMetrics
 from repro.data.pipeline import FederatedData
 from repro.federated import client as client_mod
+from repro.scenarios.base import Scenario
 
 Array = jax.Array
+
+_REF_BATCH = 32  # reference LocalTrain batch (matches the client default)
+
+
+@lru_cache(maxsize=None)
+def _jitted_trainers(epochs: int, batch: int, lr: float
+                     ) -> Tuple[Callable, Callable]:
+    """Shared jit-of-vmap trainers keyed by the training schedule, so
+    every server with the same (epochs, batch, lr) reuses one compiled
+    executable per data shape instead of retracing per FLServer — the
+    scenario × method test matrix instantiates dozens of servers."""
+    train_sel = jax.jit(jax.vmap(
+        lambda p, x, y, k: client_mod.local_train(
+            p, x, y, k, epochs=epochs, batch=batch, lr=lr),
+        in_axes=(None, 0, 0, 0)))
+    # reference LocalTrain uses the SAME schedule as clients so the
+    # Eq. 12 rescale preserves the effective server step size
+    train_refs = jax.jit(jax.vmap(
+        lambda p, x, y, k: client_mod.local_train(
+            p, x, y, k, epochs=epochs, batch=_REF_BATCH, lr=lr),
+        in_axes=(None, 0, 0, None)))
+    return train_sel, train_refs
 
 
 def _ravel_batch(updates_tree) -> Tuple[np.ndarray, Callable]:
@@ -51,6 +75,11 @@ class FLServer:
     data: FederatedData
     method: str = "cost_trustfl"
     seed: int = 0
+    # optional adversary/environment scenario (repro.scenarios): its
+    # hooks are the ONLY extension points run_round exposes — pricing
+    # (round_start), delivery failures (delivered), per-round active
+    # malice (active_malicious)
+    scenario: Optional[Scenario] = None
 
     def __post_init__(self):
         key = jax.random.PRNGKey(self.seed)
@@ -78,20 +107,12 @@ class FLServer:
         self._res_edge: Optional[Array] = None      # (K, D) edge uplinks
         self.cum_intra_bytes = 0.0
         self.cum_cross_bytes = 0.0
-        # jit the hot paths ONCE (re-tracing per round dominates runtime
-        # on CPU otherwise)
+        # jit the hot paths ONCE, shared across servers with the same
+        # schedule (re-tracing per round — or per server in a scenario
+        # matrix — dominates runtime on CPU otherwise)
         fl = self.flcfg
-        self._train_selected = jax.jit(jax.vmap(
-            lambda p, x, y, k: client_mod.local_train(
-                p, x, y, k, epochs=fl.local_epochs, batch=fl.local_batch,
-                lr=fl.lr),
-            in_axes=(None, 0, 0, 0)))
-        # reference LocalTrain uses the SAME schedule as clients so the
-        # Eq. 12 rescale preserves the effective server step size
-        self._train_refs = jax.jit(jax.vmap(
-            lambda p, x, y, k: client_mod.local_train(
-                p, x, y, k, epochs=fl.local_epochs, batch=32, lr=fl.lr),
-            in_axes=(None, 0, 0, None)))
+        self._train_selected, self._train_refs = _jitted_trainers(
+            fl.local_epochs, fl.local_batch, fl.lr)
 
     # -- attacks -------------------------------------------------------------
     def _poison_labels(self) -> np.ndarray:
@@ -202,7 +223,16 @@ class FLServer:
     def run_round(self, t: int) -> RoundMetrics:
         rng = np.random.default_rng(self.seed * 100003 + t)
         key = jax.random.PRNGKey(self.seed * 7919 + t)
+        sc = self.scenario
+        if sc is not None:
+            # environment mutation (e.g. dynamic egress pricing) BEFORE
+            # selection, so Eq. 10 and this round's $ see the same prices
+            sc.round_start(self, t, rng)
         sel = self._select(rng)
+        if sc is not None:
+            # dropout/stragglers: selected clients that never deliver
+            # neither train nor put bytes on the wire
+            sel = sc.delivered(self, t, rng, sel)
         sel_ix = np.nonzero(sel)[0]
 
         # local training for selected clients (vmap over clients)
@@ -213,11 +243,15 @@ class FLServer:
 
         flat_sel, unravel = _ravel_batch(upd_tree)
 
-        # update-level attacks on malicious selected clients
-        mal_sel = jnp.asarray(self.malicious[sel_ix])
+        # update-level attacks on the round's ACTIVE malicious clients
+        # (scenarios may gate the static set, e.g. intermittent sleepers)
+        malicious = (self.malicious if sc is None
+                     else sc.active_malicious(self, t))
+        mal_sel = jnp.asarray(malicious[sel_ix])
         flat_sel = apply_update_attack(
             self.flcfg.attack, flat_sel, mal_sel, key,
-            sigma=self.flcfg.gaussian_sigma, scale=self.flcfg.attack_scale)
+            sigma=self.flcfg.gaussian_sigma, scale=self.flcfg.attack_scale,
+            z=self.flcfg.attack_z)
 
         n = self.topo.n_clients
         lp = self.link_policy
@@ -233,12 +267,11 @@ class FLServer:
             # only the decompressed updates, incl. the last-layer slice
             flat_sel = self._compress_client_uplinks(
                 flat_sel, sel_ix, jax.random.fold_in(key, 211))
-            ll_sel = self._extract_ll(jax.vmap(unravel)(flat_sel))
-        else:
-            ll_sel = self._extract_ll(upd_tree)
-            ll_sel = apply_update_attack(self.flcfg.attack, ll_sel, mal_sel,
-                                         key, sigma=self.flcfg.gaussian_sigma,
-                                         scale=self.flcfg.attack_scale)
+        # the trust path's last-layer slice is ALWAYS taken from the
+        # attacked (and possibly compressed) flat matrix, so statistics-
+        # based adversaries (ALIE / IPM / min-max) present one consistent
+        # view to trust scoring and aggregation
+        ll_sel = self._extract_ll(jax.vmap(unravel)(flat_sel))
 
         # scatter to full (N, D) with zeros for non-selected
         flat = jnp.zeros((n, flat_sel.shape[1]), flat_sel.dtype

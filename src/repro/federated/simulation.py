@@ -4,7 +4,7 @@ protocol (3 clouds x 30 clients, Dirichlet non-IID, 4 attacks,
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -13,6 +13,9 @@ from repro.core.fl_types import CloudTopology
 from repro.data.pipeline import FederatedData, build_federated
 from repro.data.synthetic import make_cifar10_like, make_femnist_like
 from repro.federated.server import FLServer
+from repro.scenarios import Scenario, get_scenario
+
+ScenarioLike = Union[str, Scenario, None]
 
 
 @dataclass
@@ -27,6 +30,7 @@ class SimResult:
     malicious: Optional[np.ndarray] = None
     intra_bytes: float = 0.0          # cumulative wire bytes, intra-class
     cross_bytes: float = 0.0          # cumulative wire bytes, cross-cloud
+    scenario: Optional[str] = None    # registry name when one was run
 
 
 def make_topology(flcfg: FLConfig) -> CloudTopology:
@@ -44,15 +48,33 @@ def make_data(flcfg: FLConfig, dataset: str = "cifar10", seed: int = 0,
                            ref_samples=flcfg.ref_samples, seed=seed)
 
 
-def run_simulation(flcfg: FLConfig, *, method: str = "cost_trustfl",
+def _resolve_scenario(scenario: ScenarioLike) -> Optional[Scenario]:
+    return get_scenario(scenario) if isinstance(scenario, str) else scenario
+
+
+def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
+                   scenario: ScenarioLike = None,
                    dataset: str = "cifar10", rounds: Optional[int] = None,
                    eval_every: int = 5, seed: int = 0,
                    data: Optional[FederatedData] = None,
                    verbose: bool = False) -> SimResult:
+    """Run one (method, scenario) simulation.
+
+    ``scenario`` — a ``repro.scenarios`` registry name or ``Scenario``:
+    its FLConfig overrides are applied first (idempotent, so callers that
+    already applied them can pass both) and its hooks ride along on the
+    server. ``method`` defaults to ``flcfg.aggregator``; an explicit
+    argument wins over the config field.
+    """
+    scenario = _resolve_scenario(scenario)
+    if scenario is not None:
+        flcfg = scenario.apply(flcfg)
+    method = flcfg.aggregator if method is None else method
     rounds = rounds if rounds is not None else flcfg.rounds
     topo = make_topology(flcfg)
     data = data if data is not None else make_data(flcfg, dataset, seed)
-    server = FLServer(flcfg, topo, data, method=method, seed=seed)
+    server = FLServer(flcfg, topo, data, method=method, seed=seed,
+                      scenario=scenario)
 
     accs, ticks = [], []
     for t in range(rounds):
@@ -76,15 +98,22 @@ def run_simulation(flcfg: FLConfig, *, method: str = "cost_trustfl",
                                  else None),
                      malicious=server.malicious,
                      intra_bytes=server.cum_intra_bytes,
-                     cross_bytes=server.cum_cross_bytes)
+                     cross_bytes=server.cum_cross_bytes,
+                     scenario=scenario.name if scenario is not None else None)
 
 
 def compare_methods(flcfg: FLConfig, methods: List[str], *,
+                    scenario: ScenarioLike = None,
                     dataset: str = "cifar10", rounds: int = 30,
                     seed: int = 0, verbose: bool = False
                     ) -> Dict[str, SimResult]:
-    data = make_data(flcfg, dataset, seed)
-    return {m: run_simulation(flcfg, method=m, dataset=dataset,
-                              rounds=rounds, seed=seed, data=data,
-                              verbose=verbose)
+    """Run every method on ONE dataset/scenario so comparisons are
+    apples-to-apples (shared data partition, shared scenario hooks)."""
+    scenario = _resolve_scenario(scenario)
+    if scenario is not None:
+        flcfg = scenario.apply(flcfg)   # before make_data: overrides may
+    data = make_data(flcfg, dataset, seed)  # change topology/partition
+    return {m: run_simulation(flcfg, method=m, scenario=scenario,
+                              dataset=dataset, rounds=rounds, seed=seed,
+                              data=data, verbose=verbose)
             for m in methods}

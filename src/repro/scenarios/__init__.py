@@ -1,0 +1,24 @@
+"""Composable adversary + environment scenarios (``repro.scenarios``).
+
+Importing this package registers every built-in scenario; enumerate them
+with ``list_scenarios()`` and plug one into ``run_simulation(...,
+scenario=name_or_obj)`` / ``compare_methods(..., scenario=...)``. The
+registry is what lets the regression suite and ``benchmarks/
+table1_attacks.table1b_adaptive`` sweep the full scenario × method
+matrix mechanically.
+"""
+from repro.scenarios.base import (LEVELS, Scenario, get_scenario,
+                                  list_scenarios, register_scenario)
+from repro.scenarios.static import STATIC_SCENARIOS
+from repro.scenarios.adaptive import ADAPTIVE_SCENARIOS
+from repro.scenarios.environment import (ENVIRONMENT_SCENARIOS,
+                                         make_dropout_hook,
+                                         make_intermittent_hook,
+                                         make_price_surge_hook)
+
+__all__ = [
+    "LEVELS", "Scenario", "get_scenario", "list_scenarios",
+    "register_scenario", "STATIC_SCENARIOS", "ADAPTIVE_SCENARIOS",
+    "ENVIRONMENT_SCENARIOS", "make_dropout_hook", "make_intermittent_hook",
+    "make_price_surge_hook",
+]

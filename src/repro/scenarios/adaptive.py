@@ -1,0 +1,38 @@
+"""Adaptive update-level adversaries (out-of-paper extensions; see
+OptiGradTrust / FLARE in PAPERS.md). Each scenario only names an attack
+from ``repro.core.attacks.UPDATE_ATTACKS`` — the transforms themselves
+live there as jittable (N, D) functions."""
+from __future__ import annotations
+
+from repro.scenarios.base import Scenario, register_scenario
+
+ALIE = register_scenario(Scenario(
+    name="alie", level="adaptive",
+    description="a-little-is-enough: hide at mean − z·std of honest rows",
+    overrides=dict(attack="alie", malicious_frac=0.3, attack_z=1.0),
+    knobs=dict(z=1.0),
+))
+
+IPM = register_scenario(Scenario(
+    name="ipm", level="adaptive",
+    description="inner-product manipulation: submit −ε·mean(honest)",
+    overrides=dict(attack="ipm", malicious_frac=0.3, attack_scale=2.0),
+    knobs=dict(epsilon=2.0),
+))
+
+MIN_MAX = register_scenario(Scenario(
+    name="min_max", level="adaptive",
+    description="largest perturbation inside the honest distance envelope",
+    overrides=dict(attack="min_max", malicious_frac=0.3),
+    knobs=dict(iters=20),
+))
+
+COLLUSION = register_scenario(Scenario(
+    name="collusion", level="adaptive",
+    description="colluders submit one agreed −mean(their updates)",
+    overrides=dict(attack="collusion", malicious_frac=0.3,
+                   attack_scale=1.0),
+    knobs=dict(scale=1.0),
+))
+
+ADAPTIVE_SCENARIOS = (ALIE, IPM, MIN_MAX, COLLUSION)

@@ -1,0 +1,103 @@
+"""Scenario engine core: a ``Scenario`` bundles FLConfig overrides, an
+attack (by registry name, via the ``attack`` override) and per-round
+hooks into one named, registrable unit that ``FLServer``,
+``run_simulation``/``compare_methods``, the benchmarks and the test
+matrix all share.
+
+Hook surface (all optional, duck-typed against ``FLServer``):
+
+* ``on_round_start(server, t, rng)`` — environment mutation before
+  selection; e.g. dynamic egress pricing swaps ``server.cost_model`` and
+  ``server.unit_costs`` so both selection (Eq. 10) and the round's $
+  accounting see the new prices.
+* ``deliver(server, t, rng, sel) -> sel`` — post-selection delivery
+  mask; e.g. dropout/stragglers remove selected clients that never
+  deliver (they neither train nor pay wire bytes).
+* ``malicious_now(server, t) -> (N,) bool`` — per-round active-malice
+  mask; e.g. intermittent adversaries behave honestly for a warmup
+  window to farm EMA reputation (Eq. 9) before attacking.
+
+Hooks must be deterministic given ``(server.seed, t, rng)`` — the
+regression suite asserts bit-identical reruns.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import TYPE_CHECKING, Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+
+if TYPE_CHECKING:  # avoid the circular import: federated imports scenarios
+    from repro.federated.server import FLServer
+
+LEVELS = ("static", "adaptive", "environment")
+
+RoundStartHook = Callable[["FLServer", int, np.random.Generator], None]
+DeliverHook = Callable[["FLServer", int, np.random.Generator, np.ndarray],
+                       np.ndarray]
+MaliciousHook = Callable[["FLServer", int], np.ndarray]
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named adversary/environment configuration.
+
+    ``overrides`` are applied to the caller's ``FLConfig`` (attack name,
+    malicious fraction, attack knobs); ``knobs`` documents the
+    scenario-specific parameters baked into the hook closures (also
+    rendered in the README registry table).
+    """
+    name: str
+    level: str                                   # one of LEVELS
+    description: str = ""
+    overrides: Dict[str, Any] = field(default_factory=dict)
+    knobs: Dict[str, Any] = field(default_factory=dict)
+    on_round_start: Optional[RoundStartHook] = None
+    deliver: Optional[DeliverHook] = None
+    malicious_now: Optional[MaliciousHook] = None
+
+    def __post_init__(self):
+        if self.level not in LEVELS:
+            raise ValueError(f"level {self.level!r} not in {LEVELS}")
+
+    def apply(self, flcfg: FLConfig) -> FLConfig:
+        """FLConfig with this scenario's overrides applied (idempotent)."""
+        return replace(flcfg, **self.overrides) if self.overrides else flcfg
+
+    # -- hook dispatch (no-ops when the hook is unset) ------------------------
+    def round_start(self, server: "FLServer", t: int,
+                    rng: np.random.Generator) -> None:
+        if self.on_round_start is not None:
+            self.on_round_start(server, t, rng)
+
+    def delivered(self, server: "FLServer", t: int,
+                  rng: np.random.Generator, sel: np.ndarray) -> np.ndarray:
+        return sel if self.deliver is None else self.deliver(server, t, rng, sel)
+
+    def active_malicious(self, server: "FLServer", t: int) -> np.ndarray:
+        if self.malicious_now is None:
+            return server.malicious
+        return self.malicious_now(server, t)
+
+
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    if scenario.name in _SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {list_scenarios()}")
+    return _SCENARIOS[name]
+
+
+def list_scenarios(level: Optional[str] = None) -> Tuple[str, ...]:
+    return tuple(sorted(n for n, s in _SCENARIOS.items()
+                        if level is None or s.level == level))

@@ -127,6 +127,7 @@ def sim_data():
                      samples_per_client=48)
 
 
+@pytest.mark.slow
 def test_compressed_simulation_converges_under_label_flip(sim_data):
     """topk/cross_only run stays trainable under attack and cuts
     cross-cloud bytes >= 5x vs the uncompressed run."""
@@ -146,6 +147,7 @@ def test_compressed_simulation_converges_under_label_flip(sim_data):
     assert comp.total_cost < base.total_cost
 
 
+@pytest.mark.slow
 def test_flat_baseline_compresses_cross_clients_only(sim_data):
     """fedavg (flat path): cross_only compresses remote clients' uplinks,
     aggregator-cloud clients stay fp32."""

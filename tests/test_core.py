@@ -160,6 +160,19 @@ def test_aggregate_zeroes_sign_flippers():
     assert cos > 0.5
 
 
+def test_norm_inflation_cannot_farm_reputation():
+    """φ damping: a client submitting 10× the honest norm must not end up
+    with the top contribution score (regression for the scaling/gaussian
+    scenarios, where raw Eq. 7 rewarded norm inflation)."""
+    u, refs, cloud = _setup_agg()
+    u_attacked = u.at[0].multiply(10.0)
+    res = cost_trustfl_aggregate(
+        u_attacked, u_attacked[:, :16], refs, refs[:, :16], cloud,
+        jnp.ones(12, bool), ReputationState.init(12))
+    phi = np.array(res.phi)
+    assert phi[0] <= np.median(phi[1:]) + 1e-6
+
+
 def test_aggregate_beta_sums_to_one():
     u, refs, cloud = _setup_agg()
     res = cost_trustfl_aggregate(u, u[:, :16], refs, refs[:, :16], cloud,

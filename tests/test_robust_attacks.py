@@ -74,6 +74,19 @@ def test_sign_flip_negates_malicious_rows():
     assert (out[0] == -1).all() and (out[1] == 1).all()
 
 
+def test_sign_flip_honors_attack_scale():
+    """FLConfig.attack_scale must reach the transform — the dispatcher
+    used to hardcode scale=1.0 for sign_flip."""
+    u = jnp.ones((2, 4))
+    mal = jnp.array([True, False])
+    out = np.array(sign_flip_attack(u, mal, scale=3.0))
+    assert (out[0] == -3).all() and (out[1] == 1).all()
+    key = jax.random.PRNGKey(0)
+    via_dispatch = np.array(apply_update_attack("sign_flip", u, mal, key,
+                                                scale=2.5))
+    assert (via_dispatch[0] == -2.5).all() and (via_dispatch[1] == 1).all()
+
+
 def test_scaling_attack_amplifies():
     u = jnp.ones((2, 4))
     out = np.array(scaling_attack(u, jnp.array([True, False]), scale=10.0))
@@ -95,7 +108,7 @@ def test_apply_update_attack_dispatch():
     mal = jnp.array([True, False])
     for name in ("none", "label_flip"):
         assert (np.array(apply_update_attack(name, u, mal, key)) == 1).all()
-    assert (np.array(apply_update_attack("sign_flip", u, mal, key))[0]
-            == -1).all()
+    assert (np.array(apply_update_attack("sign_flip", u, mal, key,
+                                         scale=1.0))[0] == -1).all()
     with pytest.raises(ValueError):
         apply_update_attack("bogus", u, mal, key)

@@ -1,0 +1,136 @@
+"""Pure-jnp algebra of the adaptive update-level attacks (ALIE / IPM /
+min-max / collusion) and the UPDATE_ATTACKS registry dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ATTACKS, UPDATE_ATTACKS, alie_attack,
+                        apply_update_attack, collusion_attack, ipm_attack,
+                        min_max_attack, register_update_attack)
+from repro.core.attacks import _honest_moments
+
+
+def _updates(n=12, d=24, n_mal=4, seed=0, spread=0.3):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=d)
+    u = jnp.asarray(base + spread * rng.normal(size=(n, d)), jnp.float32)
+    mal = jnp.zeros(n, bool).at[:n_mal].set(True)
+    return u, mal
+
+
+def _honest_np(u, mal):
+    h = np.array(u)[~np.array(mal)]
+    return h, h.mean(0), h.std(0)
+
+
+def test_alie_rows_inside_honest_envelope():
+    u, mal = _updates()
+    z = 1.5
+    out = np.array(alie_attack(u, mal, z=z))
+    h, mean, std = _honest_np(u, mal)
+    m = np.array(mal)
+    # malicious rows lie within mean ± z·std of the honest rows ...
+    assert (np.abs(out[m] - mean) <= z * std + 1e-4).all()
+    # ... at exactly mean − z·std, identical across colluders
+    assert np.allclose(out[m], mean - z * std, atol=1e-4)
+    assert (out[m] == out[m][0]).all()
+    # honest rows untouched
+    assert np.array_equal(out[~m], np.array(u)[~m])
+
+
+def test_alie_z_scales_the_deviation():
+    u, mal = _updates()
+    _, mean, _ = _honest_np(u, mal)
+    d1 = np.abs(np.array(alie_attack(u, mal, z=1.0))[0] - mean)
+    d2 = np.abs(np.array(alie_attack(u, mal, z=2.0))[0] - mean)
+    assert (d2 >= d1 - 1e-6).all() and d2.sum() > d1.sum()
+
+
+def test_ipm_antialigned_with_honest_mean():
+    u, mal = _updates()
+    eps = 2.0
+    out = np.array(ipm_attack(u, mal, scale=eps))
+    h, mean, _ = _honest_np(u, mal)
+    m = np.array(mal)
+    assert np.allclose(out[m], -eps * mean, atol=1e-5)
+    # negative inner product with the honest direction
+    assert (out[m] @ mean < 0).all()
+    assert np.array_equal(out[~m], np.array(u)[~m])
+
+
+def test_min_max_respects_distance_envelope():
+    u, mal = _updates(spread=0.5)
+    out = np.array(min_max_attack(u, mal))
+    h, mean, _ = _honest_np(u, mal)
+    m = np.array(mal)
+    d_max = max(np.linalg.norm(a - b) for a in h for b in h)
+    # every malicious row within the max honest pairwise distance of
+    # every honest row (the evasion constraint) ...
+    dists = np.linalg.norm(h[None, :, :] - out[m][:, None, :], axis=-1)
+    assert (dists <= d_max * (1 + 1e-4) + 1e-5).all()
+    # ... but strictly displaced from the honest mean (γ > 0), jointly
+    assert (out[m] == out[m][0]).all()
+    assert np.linalg.norm(out[m][0] - mean) > 1e-3
+    # displacement is along −mean (harmful direction)
+    assert (out[m][0] - mean) @ mean < 0
+    assert np.array_equal(out[~m], np.array(u)[~m])
+
+
+def test_collusion_rows_identical_and_harmful():
+    u, mal = _updates()
+    scale = 1.5
+    out = np.array(collusion_attack(u, mal, scale=scale))
+    m = np.array(mal)
+    mal_mean = np.array(u)[m].mean(0)
+    assert np.allclose(out[m], -scale * mal_mean, atol=1e-5)
+    assert (out[m] == out[m][0]).all()
+    assert np.array_equal(out[~m], np.array(u)[~m])
+
+
+def test_honest_moments_masked():
+    u, mal = _updates()
+    mean, std = map(np.array, _honest_moments(u, mal))
+    _, mean_np, std_np = _honest_np(u, mal)
+    assert np.allclose(mean, mean_np, atol=1e-5)
+    assert np.allclose(std, std_np, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ATTACKS)
+def test_no_malicious_is_identity(name):
+    u, _ = _updates()
+    none = jnp.zeros(u.shape[0], bool)
+    out = apply_update_attack(name, u, none, jax.random.PRNGKey(0))
+    assert np.array_equal(np.array(out), np.array(u))
+
+
+@pytest.mark.parametrize("name", ATTACKS)
+def test_all_malicious_stays_finite(name):
+    """Degenerate masks (no honest rows to take statistics from) must not
+    produce NaN/inf — the scenario matrix hits small selected sets."""
+    u, _ = _updates()
+    allm = jnp.ones(u.shape[0], bool)
+    out = apply_update_attack(name, u, allm, jax.random.PRNGKey(0))
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("name", ATTACKS)
+def test_registry_dispatch_is_jittable(name):
+    u, mal = _updates()
+    f = jax.jit(lambda u, m, k: apply_update_attack(
+        name, u, m, k, sigma=0.5, scale=2.0, z=1.0))
+    out = f(u, mal, jax.random.PRNGKey(1))
+    assert out.shape == u.shape and bool(jnp.isfinite(out).all())
+
+
+def test_register_update_attack_extends_dispatch():
+    try:
+        register_update_attack(
+            "zero_out", lambda u, m, k, *, sigma, scale, z:
+            jnp.where(m[:, None], jnp.zeros_like(u), u))
+        u, mal = _updates()
+        out = np.array(apply_update_attack("zero_out", u, mal,
+                                           jax.random.PRNGKey(0)))
+        assert (out[np.array(mal)] == 0).all()
+    finally:
+        UPDATE_ATTACKS.pop("zero_out", None)

@@ -1,0 +1,168 @@
+"""Scenario engine: registry invariants and hook units (fast), plus the
+end-to-end scenario × method regression matrix (slow)."""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import CloudTopology, CostModel
+from repro.core.attacks import UPDATE_ATTACKS
+from repro.federated import make_data, run_simulation
+from repro.scenarios import (LEVELS, Scenario, get_scenario, list_scenarios,
+                             make_dropout_hook, make_intermittent_hook,
+                             make_price_surge_hook, register_scenario)
+
+_FL = dict(n_clouds=3, clients_per_cloud=4, clients_per_round=6,
+           local_epochs=1, local_batch=8, ref_samples=16)
+
+
+def _tiny_fl(**kw):
+    return FLConfig(**{**_FL, **kw})
+
+
+# -- registry invariants (fast) ------------------------------------------------
+
+def test_registry_has_the_required_matrix():
+    names = list_scenarios()
+    assert len(names) >= 7
+    assert len(list_scenarios("static")) >= 4
+    assert (len(list_scenarios("adaptive"))
+            + len(list_scenarios("environment"))) >= 3
+    for n in names:
+        assert get_scenario(n).level in LEVELS
+
+
+def test_static_scenarios_cover_the_paper_attacks():
+    static = set(list_scenarios("static"))
+    assert {"label_flip", "gaussian", "sign_flip", "scaling"} <= static
+
+
+def test_every_scenario_names_a_registered_attack():
+    for n in list_scenarios():
+        fl = get_scenario(n).apply(FLConfig())
+        assert fl.attack in UPDATE_ATTACKS
+
+
+def test_overrides_apply_is_idempotent():
+    sc = get_scenario("alie")
+    once = sc.apply(FLConfig())
+    assert once.attack == "alie" and once.malicious_frac == 0.3
+    assert sc.apply(once) == once
+
+
+def test_sign_flip_scenario_pins_paper_scale():
+    # paper semantics g ← −g, now that attack_scale is honored
+    assert get_scenario("sign_flip").apply(FLConfig()).attack_scale == 1.0
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        get_scenario("does_not_exist")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_scenario(Scenario(name="alie", level="adaptive"))
+
+
+def test_bad_level_rejected():
+    with pytest.raises(ValueError):
+        Scenario(name="x", level="bogus")
+
+
+# -- hook units (fast) ---------------------------------------------------------
+
+def test_intermittent_hook_gates_malice_by_round():
+    server = SimpleNamespace(malicious=np.array([True, False, True]))
+    hook = make_intermittent_hook(warmup=3)
+    for t in range(3):
+        assert not hook(server, t).any()
+    assert np.array_equal(hook(server, 3), server.malicious)
+
+
+def test_dropout_hook_subsets_and_never_empties():
+    hook = make_dropout_hook(p_drop=0.99)
+    sel = np.ones(10, bool)
+    out = hook(None, 0, np.random.default_rng(0), sel)
+    assert out.any() and (sel | ~out).all()          # out ⊆ sel, non-empty
+    # deterministic in the round rng
+    again = hook(None, 0, np.random.default_rng(0), sel)
+    assert np.array_equal(out, again)
+
+
+def test_price_surge_hook_swaps_cost_model_and_unit_costs():
+    fl = FLConfig()
+    topo = CloudTopology.even(3, 4)
+    cm = CostModel(fl.c_intra, fl.c_cross)
+    server = SimpleNamespace(flcfg=fl, topo=topo, cost_model=cm,
+                             unit_costs=cm.hierarchical_unit_costs(topo))
+    before = server.unit_costs.copy()
+    make_price_surge_hook((1.0, 2.0, 4.0, 2.0))(server, 2, None)
+    assert server.cost_model.c_cross == pytest.approx(fl.c_cross * 4.0)
+    assert server.cost_model.c_intra == fl.c_intra
+    assert (server.unit_costs >= before).all() and \
+        (server.unit_costs > before).any()
+
+
+# -- FLConfig.aggregator wiring (fast-ish: rounds=0, no training) --------------
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    return make_data(_tiny_fl(), "cifar10", seed=0, n_samples=600,
+                     samples_per_client=16)
+
+
+def test_aggregator_field_is_the_method_default(tiny_data):
+    fl = _tiny_fl(aggregator="fedavg")
+    r = run_simulation(fl, rounds=0, data=tiny_data, seed=0)
+    assert r.method == "fedavg"
+
+
+def test_explicit_method_wins_over_aggregator_field(tiny_data):
+    fl = _tiny_fl(aggregator="fedavg")
+    r = run_simulation(fl, method="median", rounds=0, data=tiny_data, seed=0)
+    assert r.method == "median"
+
+
+def test_aggregator_default_is_cost_trustfl(tiny_data):
+    r = run_simulation(_tiny_fl(), rounds=0, data=tiny_data, seed=0)
+    assert r.method == "cost_trustfl"
+
+
+# -- end-to-end regression matrix (slow) ---------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["cost_trustfl", "fedavg"])
+@pytest.mark.parametrize("name", list_scenarios())
+def test_scenario_matrix_smoke(name, method, tiny_data):
+    """Every registered scenario × method survives two rounds with finite
+    metrics — the mechanical enumeration the registry exists for."""
+    r = run_simulation(_tiny_fl(), method=method, scenario=name, rounds=2,
+                       eval_every=2, data=tiny_data, seed=0)
+    assert r.scenario == name
+    assert 0.0 <= r.final_accuracy <= 1.0
+    assert np.isfinite(r.total_cost) and r.total_cost >= 0.0
+    assert np.isfinite(r.intra_bytes) and np.isfinite(r.cross_bytes)
+
+
+def _auc(rep: np.ndarray, mal: np.ndarray) -> float:
+    """P(honest reputation > malicious reputation), ties at 0.5."""
+    h, m = rep[~mal][:, None], rep[mal][None, :]
+    return float((h > m).mean() + 0.5 * (h == m).mean())
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", list_scenarios("static"))
+def test_reputation_ranks_honest_above_malicious(name):
+    """Under each static paper attack, cost_trustfl's final EMA
+    reputation separates honest from malicious clients (AUC > 0.5)."""
+    fl = FLConfig(n_clouds=3, clients_per_cloud=6, clients_per_round=12,
+                  local_epochs=1, local_batch=16, ref_samples=32)
+    data = make_data(get_scenario(name).apply(fl), "cifar10", seed=0,
+                     n_samples=2000, samples_per_client=48)
+    r = run_simulation(fl, method="cost_trustfl", scenario=name, rounds=6,
+                       eval_every=6, data=data, seed=0)
+    assert r.malicious.any() and not r.malicious.all()
+    assert _auc(r.reputation, r.malicious) > 0.5

@@ -9,6 +9,9 @@ from repro.configs.base import FLConfig
 from repro.core import CloudTopology, CostModel
 from repro.federated import make_data, run_simulation
 
+# end-to-end simulations: excluded from the fast CI job (-m "not slow")
+pytestmark = pytest.mark.slow
+
 ROUNDS = 6
 _FL = dict(n_clouds=3, clients_per_cloud=6, clients_per_round=9,
            local_epochs=1, local_batch=16, ref_samples=32)
