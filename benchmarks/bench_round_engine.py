@@ -1,0 +1,170 @@
+"""Round-engine throughput: host loop vs. lax.scan vs. scan+vmap.
+
+Measures steady-state rounds/sec (compile excluded) for the same
+simulation driven three ways:
+
+* ``host``  — the legacy per-round host loop (``FLServer(engine="host")``):
+  numpy RNG, ~10 jitted dispatches, dozens of unfused eager jnp ops and
+  host syncs per round;
+* ``scan``  — the device-resident engine, ``lax.scan`` over rounds
+  (one device call per simulation);
+* ``vmap8`` — the scanned engine vmapped over 8 seeds (one device call
+  per 8-seed sweep), against 8 sequential scans of the same seeds.
+
+Each comparison runs in the regime it is about:
+
+* **fleet** config (60 clients / 3 clouds, 6 selected per round,
+  (16, 16, 3) images, d≈152k) for scan-vs-host — the fleet is much
+  larger than the round's participants, so the host loop's per-round
+  orchestration overhead and dense (N, D) materialization dominate
+  (the engine's aggregation is compact over the m selected rows);
+* **sweep** config (12 clients / 3 clouds, (8, 8, 3) images, d≈54k)
+  for vmap-vs-sequential — multi-seed batching amortizes per-op
+  dispatch, which pays off when the per-seed working set is small;
+  at large per-seed footprints a CPU run is bandwidth-bound and the
+  batch only ties sequential scans.
+
+Local-training FLOPs are identical across drivers in every comparison.
+Emits CSV rows via benchmarks.common plus ``BENCH_round_engine.json``
+(uploaded as a CI artifact) with the headline speedups.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import FLConfig
+from repro.data.pipeline import FederatedData, build_federated
+from repro.data.synthetic import ImageDataset, _class_conditional_images
+from repro.federated import engine as engine_mod
+from repro.federated.server import FLServer
+from repro.federated.simulation import make_topology
+
+N_SEEDS = 8
+
+_COMMON = dict(n_clouds=3, clients_per_round=6, local_epochs=1,
+               local_batch=8, ref_samples=16, attack="sign_flip",
+               malicious_frac=0.3, attack_scale=1.0)
+_FL = dict(clients_per_cloud=20, **_COMMON)        # fleet config (N=60)
+_FL_SWEEP = dict(clients_per_cloud=4, **_COMMON)   # sweep config (N=12)
+_FLEET_SHAPE = (16, 16, 3)
+_SWEEP_SHAPE = (8, 8, 3)
+
+
+def _tiny_data(fl: FLConfig, shape: Tuple[int, int, int],
+               n_samples: int = 2000, samples_per_client: int = 8,
+               seed: int = 0) -> FederatedData:
+    rng = np.random.default_rng(seed)
+    x, y = _class_conditional_images(rng, n_samples, shape, 10)
+    ds = ImageDataset(x, y, 10, "synth-tiny")
+    return build_federated(ds, make_topology(fl), alpha=fl.dirichlet_alpha,
+                           samples_per_client=samples_per_client,
+                           ref_samples=fl.ref_samples, seed=seed)
+
+
+def _block(tree) -> None:
+    jax.block_until_ready(jax.tree.leaves(tree))
+
+
+def _best_of(fn, n: int = 2) -> float:
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _engine_for(fl: FLConfig, data: FederatedData):
+    topo = make_topology(fl)
+    static = engine_mod.static_from(fl, topo, "cost_trustfl",
+                                    input_shape=data.client_x.shape[2:],
+                                    n_classes=data.n_classes)
+    eng = engine_mod.compiled(static)
+    dev = engine_mod.make_client_data(fl, topo, data, 0)
+    return topo, eng, dev
+
+
+def run(rounds: int = 12, out_path: str = "BENCH_round_engine.json") -> dict:
+    # --- fleet config: host loop vs. scanned engine ------------------------
+    fl = FLConfig(**_FL)
+    data = _tiny_data(fl, _FLEET_SHAPE)
+    topo, eng, dev = _engine_for(fl, data)
+
+    def host_run(seed: int) -> None:
+        server = FLServer(fl, topo, data, method="cost_trustfl", seed=seed,
+                          engine="host")
+        for t in range(rounds):
+            server.run_round(t)
+        _block(server.params)
+
+    def scan_run(seed: int) -> None:
+        fin, _ = eng.run(eng.init_state(seed), dev, rounds)
+        _block(fin.params)
+
+    host_run(0)                                   # warmup/compile
+    host_s = _best_of(lambda: host_run(1))
+    scan_run(0)                                   # warmup/compile
+    scan_s = _best_of(lambda: scan_run(1), 3)
+
+    # --- sweep config: vmapped 8-seed batch vs. 8 sequential scans ---------
+    fls = FLConfig(**_FL_SWEEP)
+    datas = _tiny_data(fls, _SWEEP_SHAPE)
+    _, engs, devs = _engine_for(fls, datas)
+    sweep_rounds = 2 * rounds
+    seeds = list(range(N_SEEDS))
+    stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
+    bstate = jax.tree.map(stack, *[engs.init_state(s) for s in seeds])
+    bdata = jax.tree.map(stack, *([devs] * N_SEEDS))
+
+    def sweep_scan(seed: int) -> None:
+        fin, _ = engs.run(engs.init_state(seed), devs, sweep_rounds)
+        _block(fin.params)
+
+    def vmap_run() -> None:
+        fin, _ = engs.run_batch(bstate, bdata, sweep_rounds)
+        _block(fin.params)
+
+    def seq_run() -> None:
+        for s in seeds:
+            sweep_scan(s)
+
+    vmap_run()                                    # warmup/compile
+    sweep_scan(0)
+    vmap_s = _best_of(vmap_run, 3)
+    seq_s = _best_of(seq_run, 2)
+
+    result = {
+        "fleet_config": {**_FL, "shape": _FLEET_SHAPE, "rounds": rounds,
+                         "d_params": eng.d_params},
+        "sweep_config": {**_FL_SWEEP, "shape": _SWEEP_SHAPE,
+                         "rounds": sweep_rounds, "n_seeds": N_SEEDS,
+                         "d_params": engs.d_params},
+        "host_rounds_per_s": rounds / host_s,
+        "scan_rounds_per_s": rounds / scan_s,
+        "vmap8_rounds_per_s": sweep_rounds * N_SEEDS / vmap_s,
+        "sequential8_rounds_per_s": sweep_rounds * N_SEEDS / seq_s,
+        "speedup_scan_vs_host": host_s / scan_s,
+        "speedup_vmap8_vs_sequential8": seq_s / vmap_s,
+    }
+    emit("round_engine/host", host_s / rounds * 1e6,
+         f"{result['host_rounds_per_s']:.1f} rounds/s")
+    emit("round_engine/scan", scan_s / rounds * 1e6,
+         f"{result['scan_rounds_per_s']:.1f} rounds/s "
+         f"({result['speedup_scan_vs_host']:.1f}x host)")
+    emit("round_engine/vmap8", vmap_s / (sweep_rounds * N_SEEDS) * 1e6,
+         f"{result['vmap8_rounds_per_s']:.1f} rounds/s "
+         f"({result['speedup_vmap8_vs_sequential8']:.2f}x sequential)")
+    Path(out_path).write_text(json.dumps(result, indent=2))
+    return result
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print(json.dumps(run(), indent=2))

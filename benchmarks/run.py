@@ -14,7 +14,7 @@ def main() -> None:
                     help="FL rounds per simulation benchmark")
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: table1,table1b,fig3,fig4,fig5,fig7,"
-                         "fig8,kernels")
+                         "fig8,kernels,round_engine")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -48,6 +48,9 @@ def main() -> None:
     if want("fig8"):
         from benchmarks import fig8_compression_pareto
         fig8_compression_pareto.run(rounds=args.rounds)
+    if want("round_engine"):
+        from benchmarks import bench_round_engine
+        bench_round_engine.run(rounds=args.rounds)
 
     print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
 

@@ -10,12 +10,13 @@ Hot paths are fused Pallas kernels (repro.kernels.topk_mask / quantize,
 interpret=True on CPU); exact wire bytes feed repro.core.cost.CostModel.
 """
 from repro.compress.base import (Codec, CompressedUpdate, ef_step,
-                                 make_codec)
+                                 ef_step_masked, make_codec)
 from repro.compress.policy import (POLICIES, LinkPolicy, build_link_policy,
                                    policy_from_flcfg)
 from repro.compress.qsgd import QSGDCodec
 from repro.compress.topk import TopKCodec
 
-__all__ = ["Codec", "CompressedUpdate", "ef_step", "make_codec",
+__all__ = ["Codec", "CompressedUpdate", "ef_step", "ef_step_masked",
+           "make_codec",
            "POLICIES", "LinkPolicy", "build_link_policy",
            "policy_from_flcfg", "QSGDCodec", "TopKCodec"]

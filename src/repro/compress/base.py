@@ -71,6 +71,22 @@ def ef_step(codec: Codec, x: Array, residual: Array, key: Array
     return x_hat, y - x_hat
 
 
+def ef_step_masked(codec: Codec, x: Array, residual: Array, row_mask: Array,
+                   key: Array) -> Tuple[Array, Array]:
+    """Pure, fixed-shape EF round for the scanned engine: rows where
+    ``row_mask`` is False pass through untouched and KEEP their residual
+    (nothing crossed the wire for them). No mutable buffers — the caller
+    gathers/scatters the per-sender residual rows explicitly, so the
+    whole step is a jittable function of (x, residual)."""
+    if codec.is_identity:
+        return x, residual
+    y = x + residual
+    x_hat = codec.roundtrip(y, key)
+    keep = row_mask[:, None]
+    return (jnp.where(keep, x_hat, x),
+            jnp.where(keep, y - x_hat, residual))
+
+
 _REGISTRY: Dict[str, Any] = {}
 
 

@@ -43,9 +43,14 @@ def _row_mask(malicious: Array, ndim: int) -> Array:
 
 
 def _honest_moments(updates: Array, malicious: Array,
+                    valid: Optional[Array] = None,
                     eps: float = 1e-12) -> tuple[Array, Array]:
-    """Per-coordinate (mean, std) over the honest rows of (N, D)."""
-    w = (~malicious).astype(updates.dtype)[:, None]
+    """Per-coordinate (mean, std) over the honest rows of (N, D).
+    ``valid`` (bool (N,), optional) excludes rows that never delivered
+    (dropout under the jittable engine) from the honest statistics —
+    adaptive adversaries can only condition on traffic that exists."""
+    honest = ~malicious if valid is None else (~malicious) & valid
+    w = honest.astype(updates.dtype)[:, None]
     n = jnp.maximum(jnp.sum(w), 1.0)
     mean = jnp.sum(updates * w, axis=0) / n
     var = jnp.sum(((updates - mean) ** 2) * w, axis=0) / n
@@ -72,31 +77,34 @@ def scaling_attack(updates: Array, malicious: Array, scale: float = 10.0) -> Arr
                      scale * updates, updates)
 
 
-def alie_attack(updates: Array, malicious: Array, z: float = 1.0) -> Array:
+def alie_attack(updates: Array, malicious: Array, z: float = 1.0,
+                valid: Optional[Array] = None) -> Array:
     """A-little-is-enough: every malicious row moves to mean − z·std of
     the honest rows — inside the per-coordinate envelope that outlier
     filters (trimmed mean, Krum distances) treat as benign."""
-    mean, std = _honest_moments(updates, malicious)
+    mean, std = _honest_moments(updates, malicious, valid)
     return jnp.where(malicious[:, None], mean - z * std, updates)
 
 
-def ipm_attack(updates: Array, malicious: Array, scale: float = 2.0) -> Array:
+def ipm_attack(updates: Array, malicious: Array, scale: float = 2.0,
+               valid: Optional[Array] = None) -> Array:
     """Inner-product manipulation: malicious rows submit −ε·mean(honest)
     so the aggregate's inner product with the true descent direction
     turns negative once ε·frac_malicious is large enough."""
-    mean, _ = _honest_moments(updates, malicious)
+    mean, _ = _honest_moments(updates, malicious, valid)
     return jnp.where(malicious[:, None], -scale * mean, updates)
 
 
 def min_max_attack(updates: Array, malicious: Array, *, iters: int = 20,
+                   valid: Optional[Array] = None,
                    eps: float = 1e-12) -> Array:
     """Min-max distance evasion (Shejwalkar & Houmansadr): malicious rows
     sit at mean(honest) + γ·p with p = −mean/‖mean‖ and γ the largest
     value (bisection) keeping the row's distance to every honest row
     within the maximum honest pairwise distance."""
-    honest = ~malicious
+    honest = ~malicious if valid is None else (~malicious) & valid
     w = honest.astype(updates.dtype)
-    mean, _ = _honest_moments(updates, malicious)
+    mean, _ = _honest_moments(updates, malicious, valid)
     p = -mean / jnp.maximum(jnp.linalg.norm(mean), eps)
 
     # pairwise honest distances via the Gram matrix — O(N^2) memory,
@@ -129,21 +137,24 @@ def min_max_attack(updates: Array, malicious: Array, *, iters: int = 20,
 
 
 def collusion_attack(updates: Array, malicious: Array,
-                     scale: float = 1.0) -> Array:
+                     scale: float = 1.0,
+                     valid: Optional[Array] = None) -> Array:
     """Collusion: every malicious row submits the same −scale·mean of the
     colluders' true updates — pairwise-identical rows defeat similarity /
     distance heuristics that assume attackers are outliers."""
-    w = malicious.astype(updates.dtype)
+    colluders = malicious if valid is None else malicious & valid
+    w = colluders.astype(updates.dtype)
     n_m = jnp.maximum(jnp.sum(w), 1.0)
     mal_mean = (w @ updates) / n_m
     return jnp.where(malicious[:, None], -scale * mal_mean, updates)
 
 
 # -- registry -----------------------------------------------------------------
-# Normalized signature: fn(updates, malicious, key, *, sigma, scale, z).
-# ``None`` marks names that are handled at the data level (or no-ops) so
-# the server's dispatch stays a single lookup. Each adapter forwards only
-# the knobs its attack reads.
+# Normalized signature: fn(updates, malicious, key, *, sigma, scale, z,
+# valid). ``None`` marks names that are handled at the data level (or
+# no-ops) so the server's dispatch stays a single lookup. Each adapter
+# forwards only the knobs its attack reads; ``valid`` (delivered mask)
+# only matters to the honest-statistics adversaries.
 AttackFn = Callable[..., Array]
 
 UPDATE_ATTACKS: Dict[str, Optional[AttackFn]] = {}
@@ -156,31 +167,44 @@ def register_update_attack(name: str, fn: Optional[AttackFn]) -> None:
 register_update_attack("none", None)
 register_update_attack("label_flip", None)   # data level, see flip_labels
 register_update_attack(
-    "gaussian", lambda u, m, k, *, sigma, scale, z: gaussian_attack(u, m, k, sigma))
+    "gaussian", lambda u, m, k, *, sigma, scale, z, valid=None:
+        gaussian_attack(u, m, k, sigma))
 register_update_attack(
-    "sign_flip", lambda u, m, k, *, sigma, scale, z: sign_flip_attack(u, m, scale))
+    "sign_flip", lambda u, m, k, *, sigma, scale, z, valid=None:
+        sign_flip_attack(u, m, scale))
 register_update_attack(
-    "scaling", lambda u, m, k, *, sigma, scale, z: scaling_attack(u, m, scale))
+    "scaling", lambda u, m, k, *, sigma, scale, z, valid=None:
+        scaling_attack(u, m, scale))
 register_update_attack(
-    "alie", lambda u, m, k, *, sigma, scale, z: alie_attack(u, m, z))
+    "alie", lambda u, m, k, *, sigma, scale, z, valid=None:
+        alie_attack(u, m, z, valid))
 register_update_attack(
-    "ipm", lambda u, m, k, *, sigma, scale, z: ipm_attack(u, m, scale))
+    "ipm", lambda u, m, k, *, sigma, scale, z, valid=None:
+        ipm_attack(u, m, scale, valid))
 register_update_attack(
-    "min_max", lambda u, m, k, *, sigma, scale, z: min_max_attack(u, m))
+    "min_max", lambda u, m, k, *, sigma, scale, z, valid=None:
+        min_max_attack(u, m, valid=valid))
 register_update_attack(
-    "collusion", lambda u, m, k, *, sigma, scale, z: collusion_attack(u, m, scale))
+    "collusion", lambda u, m, k, *, sigma, scale, z, valid=None:
+        collusion_attack(u, m, scale, valid))
 
 
 def apply_update_attack(name: str, updates: Array, malicious: Array,
                         key: Array, *, sigma: float = 1.0,
-                        scale: float = 10.0, z: float = 1.0) -> Array:
+                        scale: float = 10.0, z: float = 1.0,
+                        valid: Optional[Array] = None) -> Array:
     if name not in UPDATE_ATTACKS:
         raise ValueError(f"unknown attack {name!r}; known: "
                          f"{sorted(UPDATE_ATTACKS)}")
     fn = UPDATE_ATTACKS[name]
     if fn is None:
         return updates
-    return fn(updates, malicious, key, sigma=sigma, scale=scale, z=z)
+    if valid is None:
+        # omit the kwarg so attacks registered with the pre-`valid`
+        # adapter signature keep working (full delivery is the default)
+        return fn(updates, malicious, key, sigma=sigma, scale=scale, z=z)
+    return fn(updates, malicious, key, sigma=sigma, scale=scale, z=z,
+              valid=valid)
 
 
 ATTACKS = tuple(UPDATE_ATTACKS)

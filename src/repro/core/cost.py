@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple, Union
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fl_types import CloudTopology
@@ -131,3 +132,63 @@ class CostModel:
         HLO, see repro.roofline) at the egress rate — the TPU-mapping of
         the paper's cross-cloud fee."""
         return cross_pod_bytes / _GB * self.c_cross
+
+
+# ---------------------------------------------------------------------------
+# Jittable mirrors (repro.federated.engine): the same Eq. 1/3 accounting
+# as jnp ops so the scanned round engine can carry running bytes/cost in
+# device state. float32 byte counts are exact up to 2^24 bytes per link
+# class per round (all test/benchmark configs); SimResult totals are
+# still reduced on the host in float64 from the per-round delivered
+# masks, so the $ figures stay byte-exact at any scale.
+
+def round_bytes_jax(delivered, cloud_of, aggregator_cloud: int,
+                    client_payload, edge_payload, *,
+                    hierarchical: bool = True):
+    """(intra_bytes, cross_bytes) of one round as jnp scalars.
+
+    ``delivered``: (N,) bool/float participation. ``cloud_of`` may be a
+    traced or static (N,) int array; ``aggregator_cloud`` and the
+    payload vectors ((N,) and (K,)) are static per config.
+    """
+    w = delivered.astype(jnp.float32)
+    cp = jnp.asarray(client_payload, jnp.float32)
+    cloud_of = jnp.asarray(cloud_of)
+    same = (cloud_of == aggregator_cloud).astype(jnp.float32)
+    if not hierarchical:
+        intra = jnp.sum(cp * w * same)
+        cross = jnp.sum(cp * w * (1.0 - same))
+        return intra, cross
+    ep = jnp.asarray(edge_payload, jnp.float32)
+    k = ep.shape[0]
+    per_cloud = jnp.zeros((k,), jnp.float32).at[cloud_of].add(w)
+    active = (per_cloud > 0).astype(jnp.float32)
+    ep = ep * active
+    intra = jnp.sum(cp * w) + ep[aggregator_cloud]
+    cross = jnp.sum(ep) - ep[aggregator_cloud]
+    return intra, cross
+
+
+def round_cost_jax(delivered, cloud_of, aggregator_cloud: int,
+                   client_payload, edge_payload, c_intra, c_cross, *,
+                   hierarchical: bool = True):
+    """$ of one round (Eq. 1/3) as a jnp scalar; prices may be traced
+    (dynamic egress schedules index a per-round multiplier array)."""
+    intra_b, cross_b = round_bytes_jax(
+        delivered, cloud_of, aggregator_cloud, client_payload, edge_payload,
+        hierarchical=hierarchical)
+    return (intra_b * c_intra + cross_b * c_cross) / _GB
+
+
+def hierarchical_unit_costs_jax(cloud_of, cloud_sizes, aggregator_cloud: int,
+                                c_intra, c_cross):
+    """Jittable :meth:`CostModel.hierarchical_unit_costs` — the Eq. 10
+    marginal per-client cost with possibly-traced prices (the engine
+    recomputes this every round under a price-surge schedule)."""
+    cloud_of = jnp.asarray(cloud_of)
+    sizes = jnp.asarray(cloud_sizes, jnp.float32)
+    k = sizes.shape[0]
+    prices = jnp.full((k,), c_cross, jnp.float32
+                      ).at[aggregator_cloud].set(c_intra)
+    amortized = prices / jnp.maximum(sizes, 1.0)
+    return c_intra + amortized[cloud_of]

@@ -48,11 +48,68 @@ def select_clients(reputation: np.ndarray, unit_costs: np.ndarray, m: int,
     return chosen
 
 
+def exploration_quota(cost_lambda: float) -> int:
+    """Per-cloud exploration quota for Cost-TrustFL selection. The quota
+    is itself part of the λ trade-off: at high λ the budget concentrates
+    on cheap clouds (inactive clouds then skip their cross-cloud upload —
+    this is where Fig. 7's cost knee comes from). Single source for the
+    host loop and the device engine, so both resolve the same static
+    selected-set size."""
+    return 2 if cost_lambda < 0.75 else 0
+
+
+def selected_count(n: int, m: int, per_cloud_min: int = 0,
+                   cloud_of: np.ndarray | None = None) -> int:
+    """Static size of the selected set: quota picks are disjoint per
+    cloud, then the pool is filled to ``m`` — so the count is
+    max(min(m, n), Σ_k min(per_cloud_min, n_k)), a pure function of the
+    (static) topology. The jittable engine relies on this to keep the
+    per-round training batch a fixed shape under jit/scan."""
+    m = min(m, n)
+    if not per_cloud_min or cloud_of is None:
+        return m
+    cloud_of = np.asarray(cloud_of)
+    quota = sum(min(per_cloud_min, int((cloud_of == k).sum()))
+                for k in np.unique(cloud_of))
+    return max(m, quota)
+
+
 def select_clients_jax(reputation: Array, unit_costs: Array, m: int,
-                       cost_lambda: float = 1.0) -> Array:
-    """Jittable Eq. 10: boolean mask of top-m by r̂/c^λ."""
+                       cost_lambda: float = 1.0, *,
+                       per_cloud_min: int = 0,
+                       cloud_of: np.ndarray | None = None,
+                       key: Array | None = None) -> Array:
+    """Jittable Eq. 10 matching the numpy path's semantics: boolean mask
+    of the top-m by r̂/c^λ, with the optional per-cloud quota and
+    multiplicative tie-break noise.
+
+    ``cloud_of`` must be a *static* (numpy) assignment — the per-cloud
+    quotas and the fill count are resolved at trace time so the mask has
+    a fixed population count under jit/scan/vmap. ``key`` draws the
+    1e-4-relative exploration noise (the jax analogue of the numpy
+    path's ``rng``)."""
     ratio = reputation / unit_costs ** cost_lambda
+    if key is not None:
+        ratio = ratio * (1.0 + 1e-4 * jax.random.normal(key, ratio.shape,
+                                                        ratio.dtype))
     n = ratio.shape[0]
     m = min(m, n)
-    _, idx = jax.lax.top_k(ratio, m)
-    return jnp.zeros((n,), bool).at[idx].set(True)
+    if not per_cloud_min or cloud_of is None:
+        _, idx = jax.lax.top_k(ratio, m)
+        return jnp.zeros((n,), bool).at[idx].set(True)
+    cloud_of = np.asarray(cloud_of)
+    chosen = jnp.zeros((n,), bool)
+    quota_total = 0
+    for k in np.unique(cloud_of):
+        in_k = cloud_of == k
+        q = min(per_cloud_min, int(in_k.sum()))
+        quota_total += q
+        masked = jnp.where(jnp.asarray(in_k), ratio, -jnp.inf)
+        _, top = jax.lax.top_k(masked, q)
+        chosen = chosen.at[top].set(True)
+    remaining = m - quota_total
+    if remaining > 0:
+        masked = jnp.where(chosen, -jnp.inf, ratio)
+        _, top = jax.lax.top_k(masked, remaining)
+        chosen = chosen.at[top].set(True)
+    return chosen

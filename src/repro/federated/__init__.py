@@ -3,8 +3,9 @@ from repro.federated.client import (accuracy, cnn_apply, cnn_init,
 from repro.federated.server import FLServer
 from repro.federated.simulation import (SimResult, compare_methods,
                                         make_data, make_topology,
-                                        run_simulation)
+                                        run_simulation,
+                                        run_simulation_batch)
 
 __all__ = ["accuracy", "cnn_apply", "cnn_init", "local_train", "xent_loss",
            "FLServer", "SimResult", "compare_methods", "make_data",
-           "make_topology", "run_simulation"]
+           "make_topology", "run_simulation", "run_simulation_batch"]

@@ -1,6 +1,14 @@
 """Server-side orchestration of Algorithm 1 at simulation scale, plus
 baseline servers (FedAvg / Krum / Trimmed-Mean / Median / FLTrust) sharing
 the same round loop so Table I / Fig. 2-4 comparisons are apples-to-apples.
+
+``FLServer`` is a thin stateful wrapper over the device-resident round
+engine (``repro.federated.engine``): when the (method, attack, scenario)
+combination is jittable, each ``run_round`` is ONE jitted device call on
+a ``RoundState`` pytree; scenarios with host-only hooks (or dropout with
+an order-statistic aggregator) transparently fall back to the legacy
+host loop below, which remains the reference implementation of the
+per-round protocol.
 """
 from __future__ import annotations
 
@@ -19,14 +27,17 @@ from repro.core import (CloudTopology, CostModel, ReputationState,
                         apply_update_attack, cost_trustfl_aggregate,
                         coordinate_median, fedavg, fltrust, krum,
                         select_clients, trimmed_mean)
+from repro.core.selection import exploration_quota
 from repro.core.fl_types import RoundMetrics
 from repro.data.pipeline import FederatedData
 from repro.federated import client as client_mod
+from repro.federated import engine as engine_mod
+from repro.federated.engine import last_layer_spec, ravel_rows
 from repro.scenarios.base import Scenario
 
 Array = jax.Array
 
-_REF_BATCH = 32  # reference LocalTrain batch (matches the client default)
+_REF_BATCH = engine_mod.REF_BATCH  # reference LocalTrain batch
 
 
 @lru_cache(maxsize=None)
@@ -49,27 +60,15 @@ def _jitted_trainers(epochs: int, batch: int, lr: float
     return train_sel, train_refs
 
 
-def _ravel_batch(updates_tree) -> Tuple[np.ndarray, Callable]:
-    """Flatten a pytree with leading client axis into (N, D)."""
-    one = jax.tree.map(lambda x: x[0], updates_tree)
-    _, unravel = ravel_pytree(one)
-    flat = jax.vmap(lambda t: ravel_pytree(t)[0])(updates_tree)
-    return flat, unravel
-
-
-def _last_layer_slice(params_template) -> Callable:
-    """Returns fn extracting the flattened last-FC-layer update per client
-    (the paper's g^(L))."""
-    def extract(updates_tree) -> Array:
-        return jax.vmap(
-            lambda t: jnp.concatenate([t["fc2_w"].reshape(-1),
-                                       t["fc2_b"].reshape(-1)]))(updates_tree)
-    return extract
-
-
 @dataclass
 class FLServer:
-    """One server object per method; ``method`` picks the aggregation."""
+    """One server object per method; ``method`` picks the aggregation.
+
+    ``engine`` selects the round driver: ``"auto"`` (device engine when
+    the combination is jittable, host loop otherwise), ``"jit"`` (force
+    the engine; raises if unsupported), ``"host"`` (force the legacy
+    loop — reference semantics, used by the engine benchmark baseline).
+    """
     flcfg: FLConfig
     topo: CloudTopology
     data: FederatedData
@@ -80,6 +79,7 @@ class FLServer:
     # (round_start), delivery failures (delivered), per-round active
     # malice (active_malicious)
     scenario: Optional[Scenario] = None
+    engine: str = "auto"
 
     def __post_init__(self):
         key = jax.random.PRNGKey(self.seed)
@@ -91,14 +91,19 @@ class FLServer:
         # the flat Eq. 2 prices are used for the baselines' accounting
         self.unit_costs = self.cost_model.hierarchical_unit_costs(self.topo)
         self.cum_cost = 0.0
-        self.d_params = int(ravel_pytree(self.params)[0].size)
-        rng = np.random.default_rng(self.seed)
-        n_mal = int(self.flcfg.malicious_frac * self.topo.n_clients)
-        self.malicious = np.zeros(self.topo.n_clients, bool)
-        self.malicious[rng.choice(self.topo.n_clients, n_mal,
-                                  replace=False)] = True
-        self._extract_ll = _last_layer_slice(self.params)
-        self._poisoned_y = self._poison_labels()
+        # ravel machinery cached ONCE: the unravel closure and the flat
+        # size are pure functions of the params template, not the round
+        flat0, self._unravel = ravel_pytree(self.params)
+        self.d_params = int(flat0.size)
+        self.malicious = engine_mod.draw_malicious(self.flcfg,
+                                                   self.topo.n_clients,
+                                                   self.seed)
+        # the trust path's g^(L): derived from the template's leaf tail
+        # (not a hardcoded fc2_* name), with static flat-slice indices
+        self._ll_spec = last_layer_spec(self.params)
+        self._ll_idx = jnp.asarray(self._ll_spec.flat_idx)
+        self._poisoned_y = engine_mod.poison_labels(
+            self.flcfg, self.data, self.malicious, self.seed)
         self.history: List[RoundMetrics] = []
         # per-link gradient compression (repro.compress): codec per link
         # class, lazy error-feedback residual buffers per sender
@@ -113,27 +118,31 @@ class FLServer:
         fl = self.flcfg
         self._train_selected, self._train_refs = _jitted_trainers(
             fl.local_epochs, fl.local_batch, fl.lr)
+        # device engine: compiled programs are shared across servers with
+        # the same EngineStatic (lru_cache), state/data live on device
+        self._eng = None
+        use_engine = (self.engine != "host" and
+                      engine_mod.supports(fl, self.method, self.scenario))
+        if self.engine == "jit" and not use_engine:
+            raise ValueError(
+                f"engine='jit' but method={self.method!r} / "
+                f"scenario={getattr(self.scenario, 'name', None)!r} "
+                "is not jittable")
+        if use_engine:
+            static = engine_mod.static_from(
+                fl, self.topo, self.method, self.scenario,
+                input_shape=shape, n_classes=self.data.n_classes)
+            self._eng = engine_mod.compiled(static)
+            self._eng_data = engine_mod.make_client_data(
+                fl, self.topo, self.data, self.seed,
+                malicious=self.malicious, poisoned_y=self._poisoned_y)
+            self._eng_state = self._eng.init_state(self.seed)
 
-    # -- attacks -------------------------------------------------------------
-    def _poison_labels(self) -> np.ndarray:
-        y = np.array(self.data.client_y)
-        if self.flcfg.attack != "label_flip":
-            return y
-        rng = np.random.default_rng(self.seed + 1)
-        nc = self.data.n_classes
-        for i in np.nonzero(self.malicious)[0]:
-            y[i] = (y[i] + rng.integers(1, nc, size=y[i].shape)) % nc
-        return y
-
-    # -- selection ------------------------------------------------------------
+    # -- selection (host path) -------------------------------------------------
     def _select(self, rng: np.random.Generator) -> np.ndarray:
         m = self.flcfg.clients_per_round
         if self.method == "cost_trustfl":
-            # the per-cloud exploration quota is itself part of the λ
-            # trade-off: at high λ the budget concentrates on cheap clouds
-            # (inactive clouds then skip their cross-cloud upload — this
-            # is where Fig. 7's cost knee comes from)
-            quota = 2 if self.flcfg.cost_lambda < 0.75 else 0
+            quota = exploration_quota(self.flcfg.cost_lambda)
             return select_clients(np.array(self.rep.ema), self.unit_costs, m,
                                   per_cloud_min=quota,
                                   cloud_of=self.topo.cloud_of,
@@ -221,6 +230,36 @@ class FLServer:
 
     # -- one round --------------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
+        if self._eng is not None:
+            return self._run_round_engine(t)
+        return self._run_round_host(t)
+
+    def _run_round_engine(self, t: int) -> RoundMetrics:
+        """Engine driver: one jitted device call, then host-side float64
+        accounting from the delivered mask (byte-exact at any scale and
+        bit-identical to the lax.scan driver, which reduces the same
+        per-round masks)."""
+        state, out = self._eng.step(self._eng_state, self._eng_data, t)
+        self._eng_state = state
+        self.params = state.params
+        self.rep = ReputationState(ema=state.rep_ema)
+        delivered = np.asarray(out.delivered)
+        cost, intra_b, cross_b = self._eng.host_round_accounting(
+            delivered[None], t0=t)[0]
+        self.cum_cost += cost
+        self.cum_intra_bytes += intra_b
+        self.cum_cross_bytes += cross_b
+        metrics = RoundMetrics(round=t, cost=cost, cum_cost=self.cum_cost,
+                               selected=delivered,
+                               reputation=np.array(state.rep_ema),
+                               extra={"intra_bytes": intra_b,
+                                      "cross_bytes": cross_b})
+        self.history.append(metrics)
+        return metrics
+
+    def _run_round_host(self, t: int) -> RoundMetrics:
+        """Legacy host loop — the reference protocol implementation, and
+        the only driver for scenarios with host-only hooks."""
         rng = np.random.default_rng(self.seed * 100003 + t)
         key = jax.random.PRNGKey(self.seed * 7919 + t)
         sc = self.scenario
@@ -241,7 +280,7 @@ class FLServer:
             self.params, jnp.asarray(self.data.client_x[sel_ix]),
             jnp.asarray(self._poisoned_y[sel_ix]), keys[sel_ix])
 
-        flat_sel, unravel = _ravel_batch(upd_tree)
+        flat_sel = ravel_rows(upd_tree)
 
         # update-level attacks on the round's ACTIVE malicious clients
         # (scenarios may gate the static set, e.g. intermittent sleepers)
@@ -271,7 +310,7 @@ class FLServer:
         # attacked (and possibly compressed) flat matrix, so statistics-
         # based adversaries (ALIE / IPM / min-max) present one consistent
         # view to trust scoring and aggregation
-        ll_sel = self._extract_ll(jax.vmap(unravel)(flat_sel))
+        ll_sel = flat_sel[:, self._ll_idx]
 
         # scatter to full (N, D) with zeros for non-selected
         flat = jnp.zeros((n, flat_sel.shape[1]), flat_sel.dtype
@@ -283,7 +322,7 @@ class FLServer:
         update_flat, hierarchical = self._aggregate(flat, ll, key, sel)
 
         # apply: w <- w - eta * g   (server_lr; g is a model delta)
-        delta = unravel(update_flat * self.flcfg.server_lr)
+        delta = self._unravel(update_flat * self.flcfg.server_lr)
         self.params = jax.tree.map(lambda w, g: w - g, self.params, delta)
 
         # cost accounting (Eq. 1 / Eq. 3 structure) at exact wire bytes
@@ -311,8 +350,8 @@ class FLServer:
         sel_j = jnp.asarray(sel)
         if method == "cost_trustfl":
             ref_tree = self._reference_updates(key)
-            ref_flat, _ = _ravel_batch(ref_tree)
-            ref_ll = self._extract_ll(ref_tree)
+            ref_flat = ravel_rows(ref_tree)
+            ref_ll = ref_flat[:, self._ll_idx]
             res = cost_trustfl_aggregate(
                 flat, ll, ref_flat, ref_ll,
                 jnp.asarray(self.topo.cloud_of), sel_j, self.rep,
@@ -334,7 +373,7 @@ class FLServer:
             return coordinate_median(u), False
         if method == "fltrust":
             ref_tree = self._reference_updates(key)
-            ref_flat, _ = _ravel_batch(ref_tree)
+            ref_flat = ravel_rows(ref_tree)
             return fltrust(u, jnp.mean(ref_flat, axis=0)), False
         raise ValueError(method)
 

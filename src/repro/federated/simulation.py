@@ -4,14 +4,18 @@ protocol (3 clouds x 30 clients, Dirichlet non-IID, 4 attacks,
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.fl_types import CloudTopology
 from repro.data.pipeline import FederatedData, build_federated
 from repro.data.synthetic import make_cifar10_like, make_femnist_like
+from repro.federated import client as client_mod
+from repro.federated import engine as engine_mod
 from repro.federated.server import FLServer
 from repro.scenarios import Scenario, get_scenario
 
@@ -100,6 +104,115 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
                      intra_bytes=server.cum_intra_bytes,
                      cross_bytes=server.cum_cross_bytes,
                      scenario=scenario.name if scenario is not None else None)
+
+
+def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
+                         method: Optional[str] = None,
+                         scenario: ScenarioLike = None,
+                         dataset: str = "cifar10",
+                         rounds: Optional[int] = None,
+                         data: Optional[FederatedData] = None
+                         ) -> List[SimResult]:
+    """Device-resident multi-seed sweep: ``lax.scan`` over rounds,
+    ``vmap`` over seeds — the whole grid cell is one jitted device call.
+
+    Semantics match ``run_simulation`` driven by the engine-backed
+    ``FLServer`` (a single-seed batch is bit-identical to the host loop;
+    see tests/test_determinism.py), except that accuracy is evaluated
+    once, after the final round. Each seed gets its own data partition,
+    model init and adversary draw unless a shared ``data`` is passed.
+    Requires a jittable (method, attack, scenario) combination — host-
+    hook scenarios raise (run them through ``run_simulation``).
+    """
+    scenario = _resolve_scenario(scenario)
+    if scenario is not None:
+        flcfg = scenario.apply(flcfg)
+    method = flcfg.aggregator if method is None else method
+    rounds = rounds if rounds is not None else flcfg.rounds
+    topo = make_topology(flcfg)
+    datas = [data if data is not None else make_data(flcfg, dataset, s)
+             for s in seeds]
+    static = engine_mod.static_from(
+        flcfg, topo, method, scenario,
+        input_shape=datas[0].client_x.shape[2:],
+        n_classes=datas[0].n_classes)
+    eng = engine_mod.compiled(static)
+    if data is not None:
+        # stage the shared sample arrays on device ONCE; only labels
+        # (poisoning) and the adversary draw differ per seed
+        sx, rx, ry = (jnp.asarray(data.client_x), jnp.asarray(data.ref_x),
+                      jnp.asarray(data.ref_y))
+        mals = [engine_mod.draw_malicious(flcfg, topo.n_clients, s)
+                for s in seeds]
+        dev = [engine_mod.ClientData(
+                   client_x=sx,
+                   client_y=jnp.asarray(
+                       engine_mod.poison_labels(flcfg, data, m, s)),
+                   ref_x=rx, ref_y=ry, malicious=jnp.asarray(m))
+               for m, s in zip(mals, seeds)]
+    else:
+        dev = [engine_mod.make_client_data(flcfg, topo, d, s)
+               for d, s in zip(datas, seeds)]
+    states = [eng.init_state(s) for s in seeds]
+
+    stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
+    if rounds == 0:
+        finals, delivered, reps = states, None, None
+    elif len(seeds) == 1:
+        # unbatched scan: bit-identical to the per-round engine driver
+        fin, outs = eng.run(states[0], dev[0], rounds)
+        finals = [fin]
+        delivered = np.asarray(outs.delivered)[None]       # (1, T, N)
+        reps = np.asarray(outs.rep)[None]
+    elif data is not None:
+        # one dataset shared across seeds: broadcast the sample arrays
+        # (one device copy) and stack only the per-seed leaves (poisoned
+        # labels + adversary draw)
+        shared = engine_mod.ClientData(
+            client_x=dev[0].client_x,
+            client_y=stack(*[d.client_y for d in dev]),
+            ref_x=dev[0].ref_x, ref_y=dev[0].ref_y,
+            malicious=stack(*[d.malicious for d in dev]))
+        fin, outs = eng.run_batch_shared(jax.tree.map(stack, *states),
+                                         shared, rounds)
+        finals = [jax.tree.map(lambda x, i=i: x[i], fin)
+                  for i in range(len(seeds))]
+        delivered = np.asarray(outs.delivered)             # (S, T, N)
+        reps = np.asarray(outs.rep)
+    else:
+        fin, outs = eng.run_batch(jax.tree.map(stack, *states),
+                                  jax.tree.map(stack, *dev), rounds)
+        finals = [jax.tree.map(lambda x, i=i: x[i], fin)
+                  for i in range(len(seeds))]
+        delivered = np.asarray(outs.delivered)             # (S, T, N)
+        reps = np.asarray(outs.rep)
+
+    results = []
+    for i, s in enumerate(seeds):
+        fin = finals[i]
+        if rounds == 0:
+            acc, ticks, cost, ib, cb = [], [], 0.0, 0.0, 0.0
+            rep = np.array(fin.rep_ema)
+        else:
+            a = client_mod.accuracy(fin.params,
+                                    jnp.asarray(datas[i].test_x),
+                                    jnp.asarray(datas[i].test_y))
+            acc, ticks = [a], [rounds]
+            # byte-exact float64 accounting from the delivered masks —
+            # the same reduction the per-round FLServer driver performs
+            rows = eng.host_round_accounting(delivered[i])
+            cost, ib, cb = (float(rows[:, 0].sum()),
+                            float(rows[:, 1].sum()),
+                            float(rows[:, 2].sum()))
+            rep = reps[i, -1]
+        results.append(SimResult(
+            method=method, attack=flcfg.attack, accuracy=acc, rounds=ticks,
+            final_accuracy=acc[-1] if acc else None, total_cost=cost,
+            reputation=np.array(rep),
+            malicious=np.asarray(dev[i].malicious),
+            intra_bytes=ib, cross_bytes=cb,
+            scenario=scenario.name if scenario is not None else None))
+    return results
 
 
 def compare_methods(flcfg: FLConfig, methods: List[str], *,

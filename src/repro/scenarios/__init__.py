@@ -7,8 +7,9 @@ registry is what lets the regression suite and ``benchmarks/
 table1_attacks.table1b_adaptive`` sweep the full scenario × method
 matrix mechanically.
 """
-from repro.scenarios.base import (LEVELS, Scenario, get_scenario,
-                                  list_scenarios, register_scenario)
+from repro.scenarios.base import (LEVELS, JitHooks, Scenario,
+                                  get_scenario, list_scenarios,
+                                  register_scenario)
 from repro.scenarios.static import STATIC_SCENARIOS
 from repro.scenarios.adaptive import ADAPTIVE_SCENARIOS
 from repro.scenarios.environment import (ENVIRONMENT_SCENARIOS,
@@ -17,7 +18,7 @@ from repro.scenarios.environment import (ENVIRONMENT_SCENARIOS,
                                          make_price_surge_hook)
 
 __all__ = [
-    "LEVELS", "Scenario", "get_scenario", "list_scenarios",
+    "LEVELS", "JitHooks", "Scenario", "get_scenario", "list_scenarios",
     "register_scenario", "STATIC_SCENARIOS", "ADAPTIVE_SCENARIOS",
     "ENVIRONMENT_SCENARIOS", "make_dropout_hook", "make_intermittent_hook",
     "make_price_surge_hook",

@@ -19,6 +19,14 @@ Hook surface (all optional, duck-typed against ``FLServer``):
 
 Hooks must be deterministic given ``(server.seed, t, rng)`` — the
 regression suite asserts bit-identical reruns.
+
+**Jittable hooks** (``JitHooks``): the device-resident round engine
+(``repro.federated.engine``) cannot call host hooks from inside
+``lax.scan``, so scenarios that want the fast path declare their
+environment as *data* instead — a dropout probability, an active-malice
+warmup round, a per-round egress price multiplier schedule. A scenario
+with host hooks but no ``jit_hooks`` transparently falls back to the
+host round loop.
 """
 from __future__ import annotations
 
@@ -41,13 +49,34 @@ MaliciousHook = Callable[["FLServer", int], np.ndarray]
 
 
 @dataclass(frozen=True)
+class JitHooks:
+    """Environment-as-data: the pure-state equivalents of the host hooks,
+    consumable from inside ``lax.scan``. Every field composes (a scenario
+    may drop AND surge prices); the defaults are all no-ops.
+
+    * ``p_drop`` — each selected client independently fails to deliver
+      with this probability (at least one always delivers).
+    * ``malice_warmup`` — the static malicious set is inactive for the
+      first ``malice_warmup`` rounds (sleeper adversaries farming EMA).
+    * ``price_multipliers`` — per-round ``c_cross`` multiplier schedule,
+      cycled as ``multipliers[t % len]``; seen by Eq. 10 selection and
+      the round's $ accounting alike.
+    """
+    p_drop: float = 0.0
+    malice_warmup: int = 0
+    price_multipliers: Tuple[float, ...] = (1.0,)
+
+
+@dataclass(frozen=True)
 class Scenario:
     """A named adversary/environment configuration.
 
     ``overrides`` are applied to the caller's ``FLConfig`` (attack name,
     malicious fraction, attack knobs); ``knobs`` documents the
     scenario-specific parameters baked into the hook closures (also
-    rendered in the README registry table).
+    rendered in the README registry table). ``jit_hooks`` is the pure
+    declaration the scanned engine consumes; the host hooks remain the
+    fallback for behaviors that cannot be expressed as data.
     """
     name: str
     level: str                                   # one of LEVELS
@@ -57,10 +86,22 @@ class Scenario:
     on_round_start: Optional[RoundStartHook] = None
     deliver: Optional[DeliverHook] = None
     malicious_now: Optional[MaliciousHook] = None
+    jit_hooks: Optional[JitHooks] = None
 
     def __post_init__(self):
         if self.level not in LEVELS:
             raise ValueError(f"level {self.level!r} not in {LEVELS}")
+
+    @property
+    def jittable(self) -> bool:
+        """True when the device engine can run this scenario: either the
+        pure ``jit_hooks`` declaration exists, or there is no per-round
+        host behavior at all (attack-only scenarios — the update attacks
+        are already jittable (N, D) transforms)."""
+        if self.jit_hooks is not None:
+            return True
+        return (self.on_round_start is None and self.deliver is None
+                and self.malicious_now is None)
 
     def apply(self, flcfg: FLConfig) -> FLConfig:
         """FLConfig with this scenario's overrides applied (idempotent)."""

@@ -18,7 +18,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.cost import CostModel
-from repro.scenarios.base import Scenario, register_scenario
+from repro.scenarios.base import JitHooks, Scenario, register_scenario
 
 
 def make_dropout_hook(p_drop: float):
@@ -62,6 +62,7 @@ DROPOUT = register_scenario(Scenario(
     overrides=dict(attack="none", malicious_frac=0.0),
     knobs=dict(p_drop=0.3),
     deliver=make_dropout_hook(0.3),
+    jit_hooks=JitHooks(p_drop=0.3),
 ))
 
 INTERMITTENT = register_scenario(Scenario(
@@ -71,6 +72,7 @@ INTERMITTENT = register_scenario(Scenario(
                    attack_scale=1.0),
     knobs=dict(warmup=3, scale=1.0),
     malicious_now=make_intermittent_hook(3),
+    jit_hooks=JitHooks(malice_warmup=3),
 ))
 
 PRICE_SURGE = register_scenario(Scenario(
@@ -79,6 +81,7 @@ PRICE_SURGE = register_scenario(Scenario(
     overrides=dict(attack="none", malicious_frac=0.0),
     knobs=dict(multipliers=(1.0, 2.0, 4.0, 2.0)),
     on_round_start=make_price_surge_hook((1.0, 2.0, 4.0, 2.0)),
+    jit_hooks=JitHooks(price_multipliers=(1.0, 2.0, 4.0, 2.0)),
 ))
 
 ENVIRONMENT_SCENARIOS = (DROPOUT, INTERMITTENT, PRICE_SURGE)
