@@ -1,0 +1,82 @@
+"""CI bench-regression gate: compare a fresh benchmark JSON against the
+committed baseline and FAIL when a throughput metric drops by more than
+the threshold (default 25%).
+
+Only ``*_rounds_per_s`` keys are gated — they are the workload-level
+throughput numbers; speedup ratios and config echoes are informational.
+Metrics present in the baseline but missing from the current run fail
+too (a silently-dropped benchmark is a regression in coverage). New
+metrics in the current run pass through ungated until the baseline is
+refreshed.
+
+The committed baseline (``benchmarks/baselines/``) encodes the runner
+class it was measured on; the 25% threshold absorbs normal runner noise.
+Refresh the baseline (re-run the bench, copy the JSON) when the
+hardware class or an intentional perf trade-off changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+GATED_SUFFIX = "_rounds_per_s"
+
+DEFAULT_CURRENT = "BENCH_round_engine.json"
+DEFAULT_BASELINE = "benchmarks/baselines/BENCH_round_engine.json"
+
+
+def compare(current: Dict, baseline: Dict, threshold: float = 0.25,
+            suffix: str = GATED_SUFFIX) -> List[str]:
+    """Return the list of failures (empty = gate passes)."""
+    failures = []
+    for key in sorted(baseline):
+        base = baseline[key]
+        if not key.endswith(suffix) or not isinstance(base, (int, float)):
+            continue
+        cur = current.get(key)
+        if not isinstance(cur, (int, float)):
+            failures.append(f"{key}: missing from current results "
+                            f"(baseline {base:.2f})")
+            continue
+        floor = base * (1.0 - threshold)
+        if cur < floor:
+            failures.append(
+                f"{key}: {cur:.2f} rounds/s < floor {floor:.2f} "
+                f"(baseline {base:.2f}, threshold -{threshold:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="fresh benchmark JSON (default: %(default)s)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON (default: %(default)s)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional drop (default: 0.25)")
+    args = ap.parse_args(argv)
+
+    current = json.loads(Path(args.current).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+    failures = compare(current, baseline, threshold=args.threshold)
+
+    for key in sorted(baseline):
+        if key.endswith(GATED_SUFFIX) and isinstance(baseline[key],
+                                                     (int, float)):
+            cur = current.get(key)
+            shown = f"{cur:.2f}" if isinstance(cur, (int, float)) else "—"
+            print(f"  {key}: {shown} (baseline {baseline[key]:.2f})")
+    if failures:
+        print(f"\nBENCH REGRESSION ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

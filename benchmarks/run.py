@@ -14,7 +14,7 @@ def main() -> None:
                     help="FL rounds per simulation benchmark")
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: table1,table1b,fig3,fig4,fig5,fig7,"
-                         "fig8,kernels,round_engine")
+                         "fig8,kernels,round_engine,sharded_engine")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -51,6 +51,9 @@ def main() -> None:
     if want("round_engine"):
         from benchmarks import bench_round_engine
         bench_round_engine.run(rounds=args.rounds)
+    if want("sharded_engine"):
+        from benchmarks import bench_sharded_engine
+        bench_sharded_engine.run(rounds=max(4, args.rounds // 2))
 
     print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
 

@@ -218,6 +218,143 @@ def last_layer_spec(params_template: Dict[str, Array]) -> LastLayerSpec:
 
 
 # ---------------------------------------------------------------------------
+# shared round primitives (scan engine + sharded engine)
+#
+# Selection and delivery are REPLICATED computations in the sharded
+# engine (every shard evaluates them on the full (N,) reputation/key),
+# so both engines must build them from the same closures — a fork here
+# would silently break cross-engine parity the first time one side's
+# draw order changed.
+
+def round_key(seed, t) -> Array:
+    """The engine key schedule: ``PRNGKey(seed·7919 + t)`` (int32 on
+    device — same wrap-around caveat as the module docstring)."""
+    return jax.random.PRNGKey(seed * 7919 + t)
+
+
+def build_select_fn(st: "EngineStatic") -> Tuple[Callable, int]:
+    """``(select(rep, c_cross_t, key) -> (N,) bool mask, m_total)`` for
+    this config: jittable Eq. 10 with the per-cloud quota + tie-break
+    noise for cost_trustfl, a uniform draw for the baselines."""
+    topo = st.topology()
+    n = topo.n_clients
+    cloud_of_np = np.array(st.cloud_of)
+    cloud_sizes = np.bincount(cloud_of_np, minlength=st.n_clouds)
+    cloud_of_j = jnp.asarray(cloud_of_np)
+    quota = exploration_quota(st.cost_lambda) if st.hierarchical else 0
+    m_total = selected_count(n, st.clients_per_round, quota, cloud_of_np)
+
+    def select(rep: Array, c_cross_t, key: Array) -> Array:
+        if st.hierarchical:
+            unit_costs = hierarchical_unit_costs_jax(
+                cloud_of_j, cloud_sizes, st.aggregator_cloud, st.c_intra,
+                c_cross_t)
+            return select_clients_jax(
+                rep, unit_costs, st.clients_per_round, st.cost_lambda,
+                per_cloud_min=quota, cloud_of=cloud_of_np, key=key)
+        perm = jax.random.permutation(key, n)
+        return jnp.zeros((n,), bool).at[perm[:m_total]].set(True)
+
+    return select, m_total
+
+
+def build_deliver_fn(st: "EngineStatic") -> Callable:
+    """``deliver(sel, key) -> (N,) bool`` dropout mask (identity when the
+    scenario declares no ``p_drop``; never drops the whole round)."""
+    n = st.n_clients
+
+    def deliver(sel: Array, key: Array) -> Array:
+        if st.p_drop <= 0.0:
+            return sel
+        out = sel & (jax.random.uniform(key, (n,)) >= st.p_drop)
+        # never drop everyone: re-admit the first selected client
+        need = sel.any() & ~out.any()
+        return out | (need & (jnp.arange(n) == jnp.argmax(sel)) & sel)
+
+    return deliver
+
+
+def build_edge_wire_fn(lp, k: int, aggregator_cloud: int) -> Callable:
+    """``edge_wire(cloud_aggs, res_edge, active, ekey) -> (cloud_aggs,
+    res_edge)``: the edge→global wire model shared by every driver (scan
+    engine, sharded engine, and the host loop's ``cloud_transform``) —
+    round-trips the (K, D) cloud aggregates through each cloud's uplink
+    codec (intra-class for the aggregator's own cloud, cross for the
+    rest) with error feedback on the edge residuals.
+
+    ``active`` is a (K, 1) mask of clouds with ≥1 delivered client:
+    inactive clouds pass through and keep their residual — their row is
+    the receiver-side reference fallback, nothing crossed the wire.
+    ``ekey`` is the ``_FOLD_EDGE_WIRE`` stream; the 2=intra / 3=cross
+    sub-folds are part of the cross-engine parity contract — change
+    them here or nowhere."""
+    def edge_wire(cloud_aggs: Array, res_edge: Array, active: Array,
+                  ekey: Array) -> Tuple[Array, Array]:
+        is_agg = (jnp.arange(k) == aggregator_cloud)[:, None]
+        y = cloud_aggs + res_edge
+        hat_cross = lp.cross.roundtrip(y, jax.random.fold_in(ekey, 3))
+        # identity roundtrips are free; "all" shares one codec object,
+        # so don't run it twice over the same rows
+        hat_intra = (hat_cross if lp.intra is lp.cross
+                     else lp.intra.roundtrip(y, jax.random.fold_in(ekey, 2)))
+        x_hat = jnp.where(is_agg, hat_intra, hat_cross)
+        return (jnp.where(active, x_hat, cloud_aggs),
+                jnp.where(active, y - x_hat, res_edge))
+
+    return edge_wire
+
+
+def init_round_state(st: "EngineStatic", d: int, seed: int, *,
+                     client_wire_active: bool,
+                     edge_wire_active: bool) -> RoundState:
+    """The round-zero :class:`RoundState` shared by the scan and sharded
+    engines (the sharded engine adds mesh placement on top): per-seed
+    model init, uniform reputation, EF residual buffers only for the
+    link classes whose codecs actually distort the wire."""
+    n, k = st.n_clients, st.n_clouds
+    params = client_mod.cnn_init(jax.random.PRNGKey(seed), st.input_shape,
+                                 st.n_classes)
+    return RoundState(
+        params=params,
+        rep_ema=ReputationState.init(n).ema,
+        res_client=(jnp.zeros((n, d), jnp.float32)
+                    if client_wire_active else jnp.zeros((0,))),
+        res_edge=(jnp.zeros((k, d), jnp.float32)
+                  if edge_wire_active else jnp.zeros((0,))),
+        cum_cost=jnp.float32(0.0), cum_intra_bytes=jnp.float32(0.0),
+        cum_cross_bytes=jnp.float32(0.0),
+        seed=jnp.int32(seed))
+
+
+def host_round_accounting(static: "EngineStatic", d_params: int,
+                          client_payload: np.ndarray,
+                          edge_payload: np.ndarray,
+                          delivered_rounds: np.ndarray,
+                          t0: int = 0) -> np.ndarray:
+    """Byte-exact float64 (cost, intra_bytes, cross_bytes) rows for a
+    (T, N) stack of delivered masks — the single accounting code path
+    shared by every engine driver (per-round ``FLServer``, the
+    ``lax.scan`` batch, and the sharded mesh engine), so all of them
+    bill identically at any scale, immune to the float32 in-state
+    mirrors' 2^24 exactness bound."""
+    st = static
+    topo = st.topology()
+    mults = st.price_multipliers
+    rows = np.empty((len(delivered_rounds), 3), np.float64)
+    for i, dmask in enumerate(np.asarray(delivered_rounds, bool)):
+        cm = CostModel(st.c_intra,
+                       st.c_cross * mults[(t0 + i) % len(mults)])
+        intra_b, cross_b = cm.round_bytes(
+            topo, dmask, d_params, hierarchical=st.hierarchical,
+            client_payload=client_payload, edge_payload=edge_payload)
+        cost = cm.round_cost(
+            topo, dmask, d_params, hierarchical=st.hierarchical,
+            client_payload=client_payload, edge_payload=edge_payload)
+        rows[i] = (cost, intra_b, cross_b)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # context construction
 
 def hooks_of(scenario: Optional[Scenario]) -> JitHooks:
@@ -236,6 +373,54 @@ def supports(flcfg: FLConfig, method: str,
     if hooks_of(scenario).p_drop > 0 and method not in MASKED_DELIVERY_OK:
         return False
     return True
+
+
+def resolve_engine(engine: str, flcfg: FLConfig, topo: CloudTopology,
+                   method: str, scenario: Optional[Scenario] = None, *,
+                   n_devices: Optional[int] = None) -> str:
+    """Route a (config, method, scenario) onto a round driver:
+    ``"shard"`` (mesh-sharded engine), ``"jit"`` (single-device scan
+    engine) or ``"host"`` (legacy loop).
+
+    ``engine="auto"`` prefers the sharded engine when more than one
+    device is visible AND the combination is shard-supported, then the
+    scan engine, then the host loop — which stays the only driver for
+    host-hook scenarios and for dropout with order-statistic
+    aggregators. Forcing ``"jit"``/``"shard"`` on an unsupported
+    combination raises with the reason (loud failure, never a silent
+    mis-aggregation)."""
+    from repro.federated import sharded as sharded_mod
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    if engine == "host":
+        return "host"
+    if engine == "shard":
+        reason = sharded_mod.shard_unsupported_reason(
+            flcfg, topo, method, scenario, n_devices=n_devices)
+        if reason is not None:
+            raise ValueError(f"engine='shard' but {reason}")
+        return "shard"
+    if engine == "jit":
+        if not supports(flcfg, method, scenario):
+            raise ValueError(
+                f"engine='jit' but method={method!r} / "
+                f"scenario={getattr(scenario, 'name', None)!r} "
+                "is not jittable")
+        return "jit"
+    if engine != "auto":
+        raise ValueError(f"unknown engine {engine!r}; expected "
+                         "'auto' | 'shard' | 'jit' | 'host'")
+    # the sharded engine trains ALL clients with masking (fixed per-shard
+    # shapes), so auto only prefers it at dense participation, where the
+    # masked rows are not wasted work; forcing engine="shard" skips this
+    # heuristic
+    dense = 2 * flcfg.clients_per_round >= topo.n_clients
+    if (n_devices > 1 and dense and sharded_mod.shard_unsupported_reason(
+            flcfg, topo, method, scenario, n_devices=n_devices) is None):
+        return "shard"
+    if supports(flcfg, method, scenario):
+        return "jit"
+    return "host"
 
 
 def static_from(flcfg: FLConfig, topo: CloudTopology, method: str,
@@ -330,29 +515,11 @@ class CompiledEngine:
 
     def host_round_accounting(self, delivered_rounds: np.ndarray,
                               t0: int = 0) -> np.ndarray:
-        """Byte-exact float64 (cost, intra_bytes, cross_bytes) rows for a
-        (T, N) stack of delivered masks — the single accounting code path
-        shared by ``FLServer``'s engine driver and
-        ``run_simulation_batch`` (so loop- and scan-driven runs bill
-        identically at any scale, immune to the float32 in-state
-        mirrors' 2^24 exactness bound)."""
-        st = self.static
-        topo = st.topology()
-        mults = st.price_multipliers
-        rows = np.empty((len(delivered_rounds), 3), np.float64)
-        for i, dmask in enumerate(np.asarray(delivered_rounds, bool)):
-            cm = CostModel(st.c_intra,
-                           st.c_cross * mults[(t0 + i) % len(mults)])
-            intra_b, cross_b = cm.round_bytes(
-                topo, dmask, self.d_params, hierarchical=st.hierarchical,
-                client_payload=self.client_payload,
-                edge_payload=self.edge_payload)
-            cost = cm.round_cost(
-                topo, dmask, self.d_params, hierarchical=st.hierarchical,
-                client_payload=self.client_payload,
-                edge_payload=self.edge_payload)
-            rows[i] = (cost, intra_b, cross_b)
-        return rows
+        """See :func:`host_round_accounting` (module level — shared with
+        the sharded engine)."""
+        return host_round_accounting(self.static, self.d_params,
+                                     self.client_payload, self.edge_payload,
+                                     delivered_rounds, t0=t0)
 
 
 @lru_cache(maxsize=None)
@@ -365,7 +532,6 @@ def compiled(static: EngineStatic) -> CompiledEngine:
     agg = topo.aggregator_cloud
     cloud_of_np = np.array(st.cloud_of)
     cloud_of_j = jnp.asarray(cloud_of_np)
-    cloud_sizes = np.bincount(cloud_of_np, minlength=k)
     hier = st.hierarchical
 
     # template params: shapes only (the real init is per-seed)
@@ -383,10 +549,12 @@ def compiled(static: EngineStatic) -> CompiledEngine:
                           else lp.any_active)
     edge_wire_active = hier and lp.any_active
 
-    # resolved statically so the selected set has a fixed population
+    # selection/delivery closures shared with the sharded engine; m_total
+    # is resolved statically so the selected set has a fixed population
     # count under jit (see core.selection.exploration_quota)
-    quota = exploration_quota(st.cost_lambda) if hier else 0
-    m_total = selected_count(n, st.clients_per_round, quota, cloud_of_np)
+    _select, m_total = build_select_fn(st)
+    _deliver = build_deliver_fn(st)
+    _edge_wire = build_edge_wire_fn(lp, k, agg)
 
     price_arr = jnp.asarray(st.price_multipliers, jnp.float32)
     n_mult = len(st.price_multipliers)
@@ -407,28 +575,10 @@ def compiled(static: EngineStatic) -> CompiledEngine:
             p, x, y, kk, epochs=st.local_epochs, batch=REF_BATCH, lr=st.lr),
         in_axes=(None, 0, 0, None))
 
-    def _select(rep: Array, c_cross_t: Array, key: Array) -> Array:
-        if hier:
-            unit_costs = hierarchical_unit_costs_jax(
-                cloud_of_j, cloud_sizes, agg, st.c_intra, c_cross_t)
-            return select_clients_jax(
-                rep, unit_costs, st.clients_per_round, st.cost_lambda,
-                per_cloud_min=quota, cloud_of=cloud_of_np, key=key)
-        perm = jax.random.permutation(key, n)
-        return jnp.zeros((n,), bool).at[perm[:m_total]].set(True)
-
-    def _deliver(sel: Array, key: Array) -> Array:
-        if st.p_drop <= 0.0:
-            return sel
-        out = sel & (jax.random.uniform(key, (n,)) >= st.p_drop)
-        # never drop everyone: re-admit the first selected client
-        need = sel.any() & ~out.any()
-        return out | (need & (jnp.arange(n) == jnp.argmax(sel)) & sel)
-
     def round_step(state: RoundState, data: ClientData, t
                    ) -> Tuple[RoundState, RoundOut]:
         t = jnp.asarray(t, jnp.int32)
-        key = jax.random.PRNGKey(state.seed * 7919 + t)
+        key = round_key(state.seed, t)
         mult = price_arr[jnp.mod(t, n_mult)] if n_mult > 1 else price_arr[0]
         c_cross_t = st.c_cross * mult
 
@@ -531,21 +681,10 @@ def compiled(static: EngineStatic) -> CompiledEngine:
             cloud_aggs = (onehot.T @ (g_tilde * ts[:, None])
                           / jnp.maximum(ts_cloud, eps)[:, None])
             if edge_wire_active:
-                # pure edge→global wire: inactive clouds (no delivered
-                # clients) pass through and keep their residual — the
-                # receiver-side reference fallback never crossed the wire
-                ekey = jax.random.fold_in(key, _FOLD_EDGE_WIRE)
                 active = (onehot.T @ w > 0)[:, None]
-                is_agg = (jnp.arange(k) == agg)[:, None]
-                y = cloud_aggs + res_edge
-                hat_cross = lp.cross.roundtrip(
-                    y, jax.random.fold_in(ekey, 3))
-                hat_intra = (hat_cross if lp.intra is lp.cross
-                             else lp.intra.roundtrip(
-                                 y, jax.random.fold_in(ekey, 2)))
-                x_hat = jnp.where(is_agg, hat_intra, hat_cross)
-                res_edge = jnp.where(active, y - x_hat, res_edge)
-                cloud_aggs = jnp.where(active, x_hat, cloud_aggs)
+                cloud_aggs, res_edge = _edge_wire(
+                    cloud_aggs, res_edge, active,
+                    jax.random.fold_in(key, _FOLD_EDGE_WIRE))
             # empty/zero-trust clouds fall back to their reference update
             cloud_aggs = jnp.where((ts_cloud > eps)[:, None], cloud_aggs,
                                    ref_flat)
@@ -625,18 +764,9 @@ def compiled(static: EngineStatic) -> CompiledEngine:
                                      jnp.arange(rounds, dtype=jnp.int32))
 
     def init_state(seed: int) -> RoundState:
-        params = client_mod.cnn_init(jax.random.PRNGKey(seed),
-                                     st.input_shape, st.n_classes)
-        return RoundState(
-            params=params,
-            rep_ema=ReputationState.init(n).ema,
-            res_client=(jnp.zeros((n, d), jnp.float32)
-                        if client_wire_active else jnp.zeros((0,))),
-            res_edge=(jnp.zeros((k, d), jnp.float32)
-                      if edge_wire_active else jnp.zeros((0,))),
-            cum_cost=jnp.float32(0.0), cum_intra_bytes=jnp.float32(0.0),
-            cum_cross_bytes=jnp.float32(0.0),
-            seed=jnp.int32(seed))
+        return init_round_state(st, d, seed,
+                                client_wire_active=client_wire_active,
+                                edge_wire_active=edge_wire_active)
 
     return CompiledEngine(static=st, step=step, run=run,
                           run_batch=run_batch,

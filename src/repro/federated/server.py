@@ -64,10 +64,14 @@ def _jitted_trainers(epochs: int, batch: int, lr: float
 class FLServer:
     """One server object per method; ``method`` picks the aggregation.
 
-    ``engine`` selects the round driver: ``"auto"`` (device engine when
-    the combination is jittable, host loop otherwise), ``"jit"`` (force
-    the engine; raises if unsupported), ``"host"`` (force the legacy
-    loop — reference semantics, used by the engine benchmark baseline).
+    ``engine`` selects the round driver: ``"auto"`` (mesh-sharded engine
+    when >1 device is visible and the combination supports it, else the
+    single-device scan engine when jittable, else the host loop),
+    ``"shard"`` (force the ``("cloud", "client")`` mesh engine; raises
+    if unsupported), ``"jit"`` (force the scan engine; raises if
+    unsupported), ``"host"`` (force the legacy loop — reference
+    semantics, used by the engine benchmark baseline). Routing lives in
+    ``engine.resolve_engine``.
     """
     flcfg: FLConfig
     topo: CloudTopology
@@ -118,17 +122,24 @@ class FLServer:
         fl = self.flcfg
         self._train_selected, self._train_refs = _jitted_trainers(
             fl.local_epochs, fl.local_batch, fl.lr)
-        # device engine: compiled programs are shared across servers with
-        # the same EngineStatic (lru_cache), state/data live on device
+        # device engines: compiled programs are shared across servers
+        # with the same static config (lru_cache), state/data live on
+        # device; the sharded and scan engines duck-type the same
+        # step/host_round_accounting surface, so run_round below is
+        # driver-agnostic
         self._eng = None
-        use_engine = (self.engine != "host" and
-                      engine_mod.supports(fl, self.method, self.scenario))
-        if self.engine == "jit" and not use_engine:
-            raise ValueError(
-                f"engine='jit' but method={self.method!r} / "
-                f"scenario={getattr(self.scenario, 'name', None)!r} "
-                "is not jittable")
-        if use_engine:
+        resolved = engine_mod.resolve_engine(self.engine, fl, self.topo,
+                                             self.method, self.scenario)
+        if resolved == "shard":
+            from repro.federated import sharded as sharded_mod
+            self._eng = sharded_mod.engine_for(fl, self.topo, self.data,
+                                               self.method, self.scenario)
+            self._eng_data = self._eng.stage_data(
+                engine_mod.make_client_data(
+                    fl, self.topo, self.data, self.seed,
+                    malicious=self.malicious, poisoned_y=self._poisoned_y))
+            self._eng_state = self._eng.init_state(self.seed)
+        elif resolved == "jit":
             static = engine_mod.static_from(
                 fl, self.topo, self.method, self.scenario,
                 input_shape=shape, n_classes=self.data.n_classes)
@@ -189,19 +200,21 @@ class FLServer:
 
     def _edge_transform(self, key: Array, sel: np.ndarray
                         ) -> Optional[Callable]:
-        """Edge→global wire model for cost_trustfl_aggregate: round-trips
-        the (K, D) cloud aggregates through each cloud's uplink codec
-        (intra-class for the aggregator's own cloud, cross for the rest)
-        with error feedback on the edge residuals. Inactive clouds (no
-        selected clients — their aggregate row is the receiver-side
-        reference fallback, nothing crosses the wire) pass through
-        untouched and keep their residual, matching round_bytes which
-        bills them zero bytes."""
+        """Edge→global wire model for cost_trustfl_aggregate: the shared
+        ``engine.build_edge_wire_fn`` EF closure (one source of truth
+        across the host loop and both device engines — the key folds are
+        part of the cross-engine parity contract), adapted to this
+        loop's mutable residual buffer. ``key`` is the already-folded
+        ``_FOLD_EDGE_WIRE`` stream. Inactive clouds (no selected
+        clients — their aggregate row is the receiver-side reference
+        fallback, nothing crosses the wire) pass through untouched and
+        keep their residual, matching round_bytes which bills them zero
+        bytes."""
         lp = self.link_policy
         if not lp.any_active:
             return None
-        is_agg = (jnp.arange(self.topo.n_clouds)
-                  == self.topo.aggregator_cloud)[:, None]
+        wire = engine_mod.build_edge_wire_fn(lp, self.topo.n_clouds,
+                                             self.topo.aggregator_cloud)
         active = jnp.asarray(np.bincount(
             self.topo.cloud_of[np.asarray(sel, bool)],
             minlength=self.topo.n_clouds) > 0)[:, None]
@@ -209,15 +222,8 @@ class FLServer:
         def transform(cloud_aggs: Array) -> Array:
             if self._res_edge is None:
                 self._res_edge = jnp.zeros_like(cloud_aggs)
-            y = cloud_aggs + self._res_edge
-            hat_cross = lp.cross.roundtrip(y, jax.random.fold_in(key, 3))
-            # identity roundtrips are free; "all" shares one codec object,
-            # so don't run it twice over the same rows
-            hat_intra = (hat_cross if lp.intra is lp.cross
-                         else lp.intra.roundtrip(y, jax.random.fold_in(key, 2)))
-            x_hat = jnp.where(is_agg, hat_intra, hat_cross)
-            out = jnp.where(active, x_hat, cloud_aggs)
-            self._res_edge = jnp.where(active, y - x_hat, self._res_edge)
+            out, self._res_edge = wire(cloud_aggs, self._res_edge, active,
+                                       key)
             return out
 
         return transform

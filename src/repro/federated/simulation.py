@@ -61,6 +61,7 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
                    dataset: str = "cifar10", rounds: Optional[int] = None,
                    eval_every: int = 5, seed: int = 0,
                    data: Optional[FederatedData] = None,
+                   engine: str = "auto",
                    verbose: bool = False) -> SimResult:
     """Run one (method, scenario) simulation.
 
@@ -68,7 +69,8 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
     its FLConfig overrides are applied first (idempotent, so callers that
     already applied them can pass both) and its hooks ride along on the
     server. ``method`` defaults to ``flcfg.aggregator``; an explicit
-    argument wins over the config field.
+    argument wins over the config field. ``engine`` is forwarded to
+    ``FLServer`` (round-driver routing — see ``engine.resolve_engine``).
     """
     scenario = _resolve_scenario(scenario)
     if scenario is not None:
@@ -78,7 +80,7 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
     topo = make_topology(flcfg)
     data = data if data is not None else make_data(flcfg, dataset, seed)
     server = FLServer(flcfg, topo, data, method=method, seed=seed,
-                      scenario=scenario)
+                      scenario=scenario, engine=engine)
 
     accs, ticks = [], []
     for t in range(rounds):
@@ -213,6 +215,66 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
             intra_bytes=ib, cross_bytes=cb,
             scenario=scenario.name if scenario is not None else None))
     return results
+
+
+def run_simulation_sharded(flcfg: FLConfig, *,
+                           method: Optional[str] = None,
+                           scenario: ScenarioLike = None,
+                           dataset: str = "cifar10",
+                           rounds: Optional[int] = None, seed: int = 0,
+                           data: Optional[FederatedData] = None,
+                           n_devices: Optional[int] = None) -> SimResult:
+    """One simulation on the mesh-sharded engine
+    (``repro.federated.sharded``): clients laid out over a
+    ``("cloud", "client")`` device mesh, Eq. 5–13 as a two-stage
+    intra-cloud/cross-cloud reduction, the whole run ONE ``shard_map``'d
+    ``lax.scan`` call.
+
+    Semantics match ``run_simulation`` on the scan engine to documented
+    fp tolerance (exactly for selection/delivery masks and byte/cost
+    accounting; ~1e-4 relative for params/reputation, the bound
+    tests/test_sharded.py enforces). Accuracy is evaluated once, after
+    the final round. Raises with a clear reason for configurations the sharded
+    engine refuses (matrix-shaped attacks/codecs, host-hook scenarios,
+    populations that do not tile the device count).
+    """
+    from repro.federated import sharded as sharded_mod
+
+    scenario = _resolve_scenario(scenario)
+    if scenario is not None:
+        flcfg = scenario.apply(flcfg)
+    method = flcfg.aggregator if method is None else method
+    rounds = rounds if rounds is not None else flcfg.rounds
+    topo = make_topology(flcfg)
+    data = data if data is not None else make_data(flcfg, dataset, seed)
+    eng = sharded_mod.engine_for(flcfg, topo, data, method, scenario,
+                                 n_devices=n_devices)
+    malicious = engine_mod.draw_malicious(flcfg, topo.n_clients, seed)
+    dev = eng.stage_data(engine_mod.make_client_data(
+        flcfg, topo, data, seed, malicious=malicious))
+    state = eng.init_state(seed)
+
+    if rounds == 0:
+        return SimResult(method=method, attack=flcfg.attack, accuracy=[],
+                         rounds=[], final_accuracy=None, total_cost=0.0,
+                         reputation=np.array(state.rep_ema),
+                         malicious=malicious,
+                         scenario=(scenario.name if scenario is not None
+                                   else None))
+
+    fin, outs = eng.run(state, dev, rounds)
+    acc = client_mod.accuracy(fin.params, jnp.asarray(data.test_x),
+                              jnp.asarray(data.test_y))
+    # byte-exact float64 accounting from the delivered masks — the same
+    # reduction every other engine driver performs
+    rows = eng.host_round_accounting(np.asarray(outs.delivered))
+    return SimResult(
+        method=method, attack=flcfg.attack, accuracy=[acc], rounds=[rounds],
+        final_accuracy=acc, total_cost=float(rows[:, 0].sum()),
+        reputation=np.array(fin.rep_ema), malicious=malicious,
+        intra_bytes=float(rows[:, 1].sum()),
+        cross_bytes=float(rows[:, 2].sum()),
+        scenario=scenario.name if scenario is not None else None)
 
 
 def compare_methods(flcfg: FLConfig, methods: List[str], *,

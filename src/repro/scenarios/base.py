@@ -27,6 +27,14 @@ environment as *data* instead — a dropout probability, an active-malice
 warmup round, a per-round egress price multiplier schedule. A scenario
 with host hooks but no ``jit_hooks`` transparently falls back to the
 host round loop.
+
+``JitHooks`` are also **shard-safe** by construction: the mesh-sharded
+engine (``repro.federated.sharded``) consumes the same pure data inside
+its ``shard_map``'d scan — dropout and pricing drive *replicated* (N,)
+computations (identical draws on every shard), the malice warmup gates
+each shard's local adversary mask. A hook design that broke this (e.g.
+per-round host state) belongs in the host hooks, where the scenario
+simply loses the device engines.
 """
 from __future__ import annotations
 

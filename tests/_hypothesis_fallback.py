@@ -54,6 +54,10 @@ except ModuleNotFoundError:
             self._kwargs = kwargs
 
         def __call__(self, fn):
+            # per-test override, mirroring real hypothesis' @settings
+            # decorator semantics: the wrapper (or the bare test) carries
+            # its own max_examples, read by ``given`` at call time
+            fn._hf_settings = dict(self._kwargs)
             return fn
 
         @classmethod
@@ -72,7 +76,11 @@ except ModuleNotFoundError:
             def wrapper():
                 seed = zlib.adler32(fn.__qualname__.encode())
                 rng = np.random.default_rng(seed)
-                for _ in range(settings._active["max_examples"]):
+                over = (getattr(wrapper, "_hf_settings", None)
+                        or getattr(fn, "_hf_settings", None) or {})
+                n = over.get("max_examples",
+                             settings._active["max_examples"])
+                for _ in range(n):
                     drawn = {k: s.sample(rng) for k, s in strategies.items()}
                     fn(**drawn)
             for attr in ("__name__", "__qualname__", "__doc__", "__module__"):

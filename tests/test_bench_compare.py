@@ -1,0 +1,54 @@
+"""Unit tests for the CI bench-regression gate (benchmarks/compare.py):
+the gate's semantics are load-bearing for CI, so they are pinned here —
+only throughput keys are gated, missing metrics fail, new metrics and
+ratio/config keys pass through."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import compare  # noqa: E402
+
+
+BASE = {
+    "host_rounds_per_s": 10.0,
+    "scan_rounds_per_s": 100.0,
+    "speedup_scan_vs_host": 10.0,          # ratio: not gated
+    "fleet_config": {"n_clouds": 3},       # config echo: not gated
+}
+
+
+def test_gate_passes_within_threshold():
+    cur = dict(BASE, host_rounds_per_s=8.0, scan_rounds_per_s=76.0)
+    assert compare(cur, BASE, threshold=0.25) == []
+
+
+def test_gate_fails_on_big_drop():
+    cur = dict(BASE, scan_rounds_per_s=70.0)
+    failures = compare(cur, BASE, threshold=0.25)
+    assert len(failures) == 1 and "scan_rounds_per_s" in failures[0]
+
+
+def test_gate_fails_on_missing_metric():
+    cur = {"host_rounds_per_s": 10.0}
+    failures = compare(cur, BASE, threshold=0.25)
+    assert any("missing" in f and "scan_rounds_per_s" in f
+               for f in failures)
+
+
+def test_ratio_and_config_keys_are_not_gated():
+    cur = dict(BASE, speedup_scan_vs_host=1.0)   # ratio collapsed 10x
+    assert compare(cur, BASE, threshold=0.25) == []
+
+
+def test_new_metrics_pass_until_baseline_refresh():
+    cur = dict(BASE, sharded_rounds_per_s=1.0)
+    assert compare(cur, BASE, threshold=0.25) == []
+
+
+def test_threshold_is_respected():
+    cur = dict(BASE, host_rounds_per_s=7.4)      # -26%
+    assert compare(cur, BASE, threshold=0.25) != []
+    assert compare(cur, BASE, threshold=0.30) == []

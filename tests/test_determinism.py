@@ -10,11 +10,14 @@ reputation and final params to the per-round host loop (engine-backed
 import jax
 import numpy as np
 import pytest
+from _hypothesis_fallback import given, settings, st
 
 from repro.configs.base import FLConfig
-from repro.federated import (make_data, make_topology, run_simulation,
-                             run_simulation_batch)
+from repro.federated import (FLServer, make_data, make_topology,
+                             run_simulation, run_simulation_batch,
+                             run_simulation_sharded)
 from repro.federated import engine as engine_mod
+from repro.scenarios import get_scenario
 
 pytestmark = pytest.mark.slow
 
@@ -211,6 +214,101 @@ def test_legacy_host_loop_is_deterministic(method, compressor):
     for k in a.params:
         assert np.array_equal(np.asarray(a.params[k]),
                               np.asarray(b.params[k]))
+
+
+# -- property-based cross-engine parity fuzz ----------------------------------
+#
+# Draws over the scenario × method × compressor × selected_count space and
+# asserts the three-way engine contract on every drawn configuration:
+#
+# * per-round jit driver vs lax.scan driver — bit-exact (same traced
+#   computation driven two ways);
+# * legacy host loop with the jit driver's selection masks replayed —
+#   byte-exact $/bytes, params/reputation to fp tolerance (the compact
+#   m-row aggregation vs the (N, D) reference associate differently);
+# * sharded engine on a 1×1 mesh — masks/$ exact, reputation/accuracy
+#   to fp tolerance.
+#
+# The space deliberately excludes host-RNG scenarios (dropout draws
+# delivery from numpy on the host path — replaying selection is not
+# enough) and matrix-shaped randomness (gaussian / min_max / qsgd),
+# which the sharded engine refuses by design; those exclusions are the
+# routing tests' responsibility.
+
+_FUZZ_BASE = dict(n_clouds=3, clients_per_cloud=4, local_epochs=1,
+                  local_batch=8, ref_samples=16, attack="sign_flip",
+                  malicious_frac=0.3, attack_scale=1.0)
+_FUZZ_TOL = dict(rtol=1e-4, atol=1e-6)
+_FUZZ_ROUNDS = 2
+_fuzz_data_cache = {}
+
+
+def _fuzz_data():
+    # one dataset for the whole fuzz — cross-ENGINE parity is the
+    # property under test; pipeline determinism has its own tests above
+    if "d" not in _fuzz_data_cache:
+        fl = FLConfig(clients_per_round=6, **_FUZZ_BASE)
+        _fuzz_data_cache["d"] = make_data(fl, "cifar10", seed=0,
+                                          n_samples=400,
+                                          samples_per_client=8)
+    return _fuzz_data_cache["d"]
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(method=st.sampled_from(_METHODS),
+       compressor=st.sampled_from(("none", "topk")),
+       scenario=st.sampled_from((None, "price_surge", "alie")),
+       clients_per_round=st.sampled_from((4, 6)))
+def test_cross_engine_parity_fuzz(method, compressor, scenario,
+                                  clients_per_round):
+    fl = FLConfig(clients_per_round=clients_per_round,
+                  compressor=compressor, compress_ratio=0.25,
+                  link_policy="cross_only", **_FUZZ_BASE)
+    sc = get_scenario(scenario) if scenario else None
+    if sc is not None:
+        fl = sc.apply(fl)
+    data = _fuzz_data()
+    topo = make_topology(fl)
+
+    jit_srv = FLServer(fl, topo, data, method=method, seed=0, scenario=sc,
+                       engine="jit")
+    masks = [np.asarray(jit_srv.run_round(t).selected)
+             for t in range(_FUZZ_ROUNDS)]
+    jit_rep = np.array(jit_srv.rep.ema)
+
+    # scan driver: the same traced computation, bit-exact
+    scan = run_simulation_batch(fl, seeds=[0], method=method, scenario=sc,
+                                rounds=_FUZZ_ROUNDS, data=data)[0]
+    assert scan.total_cost == jit_srv.cum_cost
+    assert scan.intra_bytes == jit_srv.cum_intra_bytes
+    assert scan.cross_bytes == jit_srv.cum_cross_bytes
+    assert np.array_equal(scan.reputation, jit_rep)
+
+    # host loop, selection replayed from the jit driver
+    host_srv = FLServer(fl, topo, data, method=method, seed=0, scenario=sc,
+                        engine="host")
+    replay = iter(masks)
+    host_srv._select = lambda rng: next(replay)
+    for t in range(_FUZZ_ROUNDS):
+        host_srv.run_round(t)
+    assert host_srv.cum_cost == jit_srv.cum_cost
+    assert host_srv.cum_intra_bytes == jit_srv.cum_intra_bytes
+    assert host_srv.cum_cross_bytes == jit_srv.cum_cross_bytes
+    np.testing.assert_allclose(np.array(host_srv.rep.ema), jit_rep,
+                               **_FUZZ_TOL)
+    for k in host_srv.params:
+        np.testing.assert_allclose(np.asarray(host_srv.params[k]),
+                                   np.asarray(jit_srv.params[k]),
+                                   err_msg=k, **_FUZZ_TOL)
+
+    # sharded engine on a 1×1 mesh
+    shard = run_simulation_sharded(fl, method=method, scenario=sc,
+                                   rounds=_FUZZ_ROUNDS, data=data, seed=0,
+                                   n_devices=1)
+    assert shard.total_cost == jit_srv.cum_cost
+    assert shard.intra_bytes == jit_srv.cum_intra_bytes
+    assert shard.cross_bytes == jit_srv.cum_cross_bytes
+    np.testing.assert_allclose(shard.reputation, jit_rep, **_FUZZ_TOL)
 
 
 def test_vmapped_batch_is_deterministic_and_seedwise_consistent():

@@ -1,0 +1,249 @@
+"""Mesh-sharded round engine (``repro.federated.sharded``): support
+gating + driver routing (fast), and the 1×1-mesh parity contract against
+the single-device scan engine (slow).
+
+Parity tolerance: selection/delivery masks and byte/cost accounting are
+EXACT (the sharded engine evaluates the same replicated closures and the
+same ``round_bytes`` reduction on the same masks); reputation and params
+agree to ~1e-4 relative — psum partial sums associate differently than
+the scan engine's flat matmuls, so bitwise equality is not promised.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.fl_types import CloudTopology
+from repro.federated import (FLServer, make_data, make_topology,
+                             run_simulation, run_simulation_sharded)
+from repro.federated import engine as engine_mod
+from repro.federated import sharded as sharded_mod
+from repro.scenarios import Scenario, get_scenario
+
+_FL = dict(n_clouds=3, clients_per_cloud=4, clients_per_round=6,
+           local_epochs=1, local_batch=8, ref_samples=16,
+           attack="sign_flip", malicious_frac=0.3, attack_scale=1.0)
+
+REP_TOL = dict(rtol=1e-4, atol=1e-6)
+ACC_TOL = 0.01    # tiny param deltas may flip isolated test-set argmaxes
+
+
+def _fl(**over) -> FLConfig:
+    cfg = dict(_FL)
+    cfg.update(over)
+    return FLConfig(**cfg)
+
+
+# ---------------------------------------------------------------------------
+# support gating + routing (fast: no simulation runs)
+
+def test_mesh_axes_factorization():
+    """The cloud axis takes the largest common divisor, columns own
+    whole clouds, and populations must tile the device count."""
+    assert sharded_mod.mesh_axes(4, 1024, 8) == (4, 2)
+    assert sharded_mod.mesh_axes(3, 12, 1) == (1, 1)
+    assert sharded_mod.mesh_axes(3, 12, 3) == (3, 1)
+    assert sharded_mod.mesh_axes(32, 1024, 8) == (8, 1)
+    assert sharded_mod.mesh_axes(3, 12, 8) is None     # 12 % 8 != 0
+    assert sharded_mod.mesh_axes(3, 12, 24) is None    # > 1 shard/client
+
+
+@pytest.mark.parametrize("over,frag", [
+    (dict(attack="gaussian"), "matrix-shaped"),
+    (dict(attack="min_max"), "matrix-shaped"),
+    (dict(compressor="qsgd", link_policy="all"), "quantization noise"),
+])
+def test_shard_rejects_matrix_shaped_configs(over, frag):
+    """Attacks/codecs whose randomness or statistics are tied to the
+    selected matrix's layout must be refused loudly."""
+    fl = _fl(**over)
+    topo = make_topology(fl)
+    reason = sharded_mod.shard_unsupported_reason(fl, topo, "cost_trustfl")
+    assert reason is not None and frag in reason
+    with pytest.raises(ValueError, match=frag):
+        engine_mod.resolve_engine("shard", fl, topo, "cost_trustfl")
+
+
+@pytest.mark.parametrize("method", ["krum", "trimmed_mean", "median"])
+def test_shard_rejects_dropout_with_order_statistics(method):
+    """Masked-delivery zero rows would count as extra clients for the
+    order-statistic aggregators — same exclusion as the scan engine."""
+    fl = _fl()
+    topo = make_topology(fl)
+    sc = get_scenario("dropout")
+    reason = sharded_mod.shard_unsupported_reason(fl, topo, method, sc)
+    assert reason is not None and "order-statistic" in reason
+    with pytest.raises(ValueError, match="order-statistic"):
+        engine_mod.resolve_engine("shard", fl, topo, method, sc)
+
+
+def test_shard_rejects_host_hook_scenarios():
+    sc = Scenario(name="hosty", level="environment",
+                  deliver=lambda srv, t, rng, sel: sel)
+    fl = _fl()
+    reason = sharded_mod.shard_unsupported_reason(fl, make_topology(fl),
+                                                  "cost_trustfl", sc)
+    assert reason is not None and "host-only hooks" in reason
+
+
+def test_shard_rejects_uneven_topology():
+    fl = _fl()
+    topo = CloudTopology(cloud_of=np.array([0] * 7 + [1] * 5), n_clouds=2,
+                         aggregator_cloud=0)
+    reason = sharded_mod.shard_unsupported_reason(fl, topo, "cost_trustfl")
+    assert reason is not None and "contiguous" in reason
+
+
+def test_shard_rejects_untileable_population():
+    fl = _fl()   # N = 12
+    topo = make_topology(fl)
+    reason = sharded_mod.shard_unsupported_reason(fl, topo, "cost_trustfl",
+                                                  n_devices=5)
+    assert reason is not None and "tile" in reason
+
+
+def test_resolve_engine_routing():
+    """auto: shard only with >1 device + dense participation + support;
+    jit when the scan engine can run it; host for everything else."""
+    fl = _fl()                       # N=12, m=6 -> dense (2*6 >= 12)
+    topo = make_topology(fl)
+    resolve = engine_mod.resolve_engine
+    assert resolve("auto", fl, topo, "cost_trustfl", n_devices=1) == "jit"
+    assert resolve("auto", fl, topo, "cost_trustfl", n_devices=4) == "shard"
+    # sparse participation: masked all-client training would waste work
+    sparse = _fl(clients_per_round=3)
+    assert resolve("auto", sparse, topo, "fedavg", n_devices=4) == "jit"
+    # forcing shard skips the density heuristic
+    assert resolve("shard", sparse, topo, "fedavg", n_devices=4) == "shard"
+    # shard-unsupported but jittable combination falls back to jit
+    gauss = _fl(attack="gaussian")
+    assert resolve("auto", gauss, topo, "cost_trustfl", n_devices=4) == "jit"
+    # dropout x order statistics must land on the host loop
+    sc = get_scenario("dropout")
+    assert resolve("auto", fl, topo, "krum", sc, n_devices=4) == "host"
+    assert resolve("auto", fl, topo, "krum", sc, n_devices=1) == "host"
+    # ...while masked-delivery-safe aggregators stay on a device engine
+    assert resolve("auto", sc.apply(fl), topo, "cost_trustfl", sc,
+                   n_devices=1) == "jit"
+    with pytest.raises(ValueError, match="not jittable"):
+        resolve("jit", fl, topo, "krum", sc)
+    with pytest.raises(ValueError, match="unknown engine"):
+        resolve("tpu", fl, topo, "cost_trustfl")
+
+
+def test_engine_auto_falls_back_to_host_on_server():
+    """Routing regression at the FLServer level: dropout + krum must run
+    the legacy host loop (no compiled engine attached)."""
+    fl = get_scenario("dropout").apply(_fl())
+    topo = make_topology(fl)
+    data = make_data(fl, "cifar10", seed=0, n_samples=300,
+                     samples_per_client=8)
+    srv = FLServer(fl, topo, data, method="krum", seed=0,
+                   scenario=get_scenario("dropout"))
+    assert srv._eng is None
+    with pytest.raises(ValueError, match="order-statistic"):
+        FLServer(fl, topo, data, method="krum", seed=0,
+                 scenario=get_scenario("dropout"), engine="shard")
+
+
+# ---------------------------------------------------------------------------
+# 1×1-mesh parity vs the scan engine (slow)
+
+@pytest.fixture(scope="module")
+def shared_data():
+    return make_data(_fl(), "cifar10", seed=0, n_samples=600,
+                     samples_per_client=16)
+
+
+def _assert_parity(a, b):
+    """a = scan-engine SimResult, b = sharded SimResult."""
+    assert a.total_cost == b.total_cost
+    assert a.intra_bytes == b.intra_bytes
+    assert a.cross_bytes == b.cross_bytes
+    assert np.array_equal(a.malicious, b.malicious)
+    np.testing.assert_allclose(a.reputation, b.reputation, **REP_TOL)
+    assert abs(a.final_accuracy - b.final_accuracy) <= ACC_TOL
+
+
+def _pair(fl, method, data, scenario=None, rounds=3):
+    a = run_simulation(fl, method=method, scenario=scenario, rounds=rounds,
+                       eval_every=rounds, data=data, seed=0, engine="jit")
+    b = run_simulation_sharded(fl, method=method, scenario=scenario,
+                               rounds=rounds, data=data, seed=0,
+                               n_devices=1)
+    return a, b
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["cost_trustfl", "fedavg", "krum",
+                                    "trimmed_mean", "median", "fltrust"])
+def test_sharded_matches_scan_engine(method, shared_data):
+    """All six methods: byte/cost accounting exact, reputation and final
+    accuracy within the documented tolerance."""
+    _assert_parity(*_pair(_fl(), method, shared_data))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("link_policy", ["cross_only", "all"])
+def test_sharded_matches_scan_engine_compressed(link_policy, shared_data):
+    """top-k EF residuals live sharded with their clients and replay the
+    scan engine's state bookkeeping."""
+    fl = _fl(compressor="topk", compress_ratio=0.25,
+             link_policy=link_policy)
+    _assert_parity(*_pair(fl, "cost_trustfl", shared_data))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", ["dropout", "price_surge",
+                                      "intermittent"])
+def test_sharded_matches_scan_engine_scenarios(scenario, shared_data):
+    """JitHooks are shard-safe: pure data (dropout p, malice warmup,
+    price schedules) consumed identically inside the shard_map'd scan."""
+    _assert_parity(*_pair(_fl(), "cost_trustfl", shared_data,
+                          scenario=scenario))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("attack", ["scaling", "alie", "ipm", "collusion"])
+def test_sharded_matches_scan_engine_attacks(attack, shared_data):
+    """Shard-decomposable adversaries: per-row transforms and masked
+    global-moment attacks see the same row set as the scan engine."""
+    _assert_parity(*_pair(_fl(attack=attack), "cost_trustfl", shared_data))
+
+
+@pytest.mark.slow
+def test_server_shard_driver_matches_jit_driver(shared_data):
+    """FLServer engine="shard" (per-round step dispatch) tracks the jit
+    per-round driver: identical masks and $, reputation to tolerance."""
+    fl = _fl()
+    topo = make_topology(fl)
+    a = FLServer(fl, topo, shared_data, method="cost_trustfl", seed=0,
+                 engine="jit")
+    b = FLServer(fl, topo, shared_data, method="cost_trustfl", seed=0,
+                 engine="shard")
+    for t in range(3):
+        ma, mb = a.run_round(t), b.run_round(t)
+        assert np.array_equal(ma.selected, mb.selected)
+        assert ma.cost == mb.cost
+        assert ma.extra == mb.extra
+    np.testing.assert_allclose(np.array(a.rep.ema), np.array(b.rep.ema),
+                               **REP_TOL)
+
+
+@pytest.mark.slow
+def test_sharded_rerun_is_bit_identical(shared_data):
+    """Same (config, seed) ⇒ the same sharded SimResult, bit for bit —
+    the sharded engine joins the determinism contract."""
+    kw = dict(method="cost_trustfl", rounds=3, data=shared_data, seed=0,
+              n_devices=1)
+    a = run_simulation_sharded(_fl(), **kw)
+    b = run_simulation_sharded(_fl(), **kw)
+    assert a.accuracy == b.accuracy
+    assert a.total_cost == b.total_cost
+    assert np.array_equal(a.reputation, b.reputation)
+
+
+def test_sharded_zero_rounds(shared_data):
+    res = run_simulation_sharded(_fl(), method="cost_trustfl", rounds=0,
+                                 data=shared_data, seed=0, n_devices=1)
+    assert res.final_accuracy is None
+    assert res.total_cost == 0.0
