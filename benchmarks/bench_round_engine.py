@@ -45,6 +45,11 @@ from repro.data.synthetic import ImageDataset, _class_conditional_images
 from repro.federated import engine as engine_mod
 from repro.federated.server import FLServer
 from repro.federated.simulation import make_topology
+from repro.telemetry import RingBufferSink, Telemetry
+from repro.telemetry import taps as taps_mod
+from repro.telemetry.provenance import stamp
+from repro.telemetry.schema import RunContext
+from repro.telemetry.taps import TapSpec
 
 N_SEEDS = 8
 
@@ -113,6 +118,33 @@ def run(rounds: int = 12, out_path: str = "BENCH_round_engine.json") -> dict:
     scan_run(0)                                   # warmup/compile
     scan_s = _best_of(lambda: scan_run(1), 3)
 
+    # --- same fleet scan with the live telemetry tap ON --------------------
+    # (real consumer: RunContext event build + ring-buffer sink per round)
+    tapped = engine_mod.compiled(eng.static, TapSpec(enabled=True))
+    tel = Telemetry(RingBufferSink(capacity=2 * rounds))
+    st = eng.static
+
+    def tap_run(seed: int) -> None:
+        ctx = RunContext(
+            tel, engine="jit", run_id=f"bench-s{seed}",
+            method="cost_trustfl", attack=fl.attack, seed=seed, topo=topo,
+            d_params=eng.d_params, hierarchical=st.hierarchical,
+            m_selected=engine_mod.selected_total(st),
+            malicious=np.asarray(dev.malicious),
+            client_payload=eng.client_payload,
+            edge_payload=eng.edge_payload, c_intra=st.c_intra,
+            c_cross=st.c_cross, price_multipliers=st.price_multipliers,
+            malice_warmup=st.malice_warmup)
+        collect = lambda t, out: ctx.round(
+            int(t), np.asarray(out.delivered), np.asarray(out.rep),
+            float(out.params_l2))
+        with taps_mod.collecting(collect):
+            fin, _ = tapped.run(tapped.init_state(seed), dev, rounds)
+            _block(fin.params)
+
+    tap_run(0)                                    # warmup/compile
+    tap_s = _best_of(lambda: tap_run(1), 3)
+
     # --- sweep config: vmapped 8-seed batch vs. 8 sequential scans ---------
     fls = FLConfig(**_FL_SWEEP)
     datas = _tiny_data(fls, _SWEEP_SHAPE)
@@ -148,16 +180,22 @@ def run(rounds: int = 12, out_path: str = "BENCH_round_engine.json") -> dict:
                          "d_params": engs.d_params},
         "host_rounds_per_s": rounds / host_s,
         "scan_rounds_per_s": rounds / scan_s,
+        "scan_tap_rounds_per_s": rounds / tap_s,
         "vmap8_rounds_per_s": sweep_rounds * N_SEEDS / vmap_s,
         "sequential8_rounds_per_s": sweep_rounds * N_SEEDS / seq_s,
         "speedup_scan_vs_host": host_s / scan_s,
         "speedup_vmap8_vs_sequential8": seq_s / vmap_s,
+        "telemetry_overhead_pct": (tap_s / scan_s - 1.0) * 100.0,
+        "provenance": stamp(),
     }
     emit("round_engine/host", host_s / rounds * 1e6,
          f"{result['host_rounds_per_s']:.1f} rounds/s")
     emit("round_engine/scan", scan_s / rounds * 1e6,
          f"{result['scan_rounds_per_s']:.1f} rounds/s "
          f"({result['speedup_scan_vs_host']:.1f}x host)")
+    emit("round_engine/scan_tap", tap_s / rounds * 1e6,
+         f"{result['scan_tap_rounds_per_s']:.1f} rounds/s "
+         f"(+{result['telemetry_overhead_pct']:.1f}% vs untapped)")
     emit("round_engine/vmap8", vmap_s / (sweep_rounds * N_SEEDS) * 1e6,
          f"{result['vmap8_rounds_per_s']:.1f} rounds/s "
          f"({result['speedup_vmap8_vs_sequential8']:.2f}x sequential)")

@@ -240,11 +240,12 @@ def _spawn(phase: str, rounds: int, n_devices: int) -> dict:
 def run(rounds: int = 6,
         out_path: str = "BENCH_sharded_engine.json") -> dict:
     from benchmarks.common import emit
+    from repro.telemetry.provenance import stamp
 
     parity = _spawn("parity", max(3, rounds // 2), 1)
     fleet = _spawn("fleet", rounds, FLEET_N_DEVICES)
 
-    result = {**fleet, "parity_1dev": parity}
+    result = {**fleet, "parity_1dev": parity, "provenance": stamp()}
     emit("sharded_engine/scan",
          1e6 / fleet["unsharded_scan_rounds_per_s"],
          f"{fleet['unsharded_scan_rounds_per_s']:.2f} rounds/s @N="

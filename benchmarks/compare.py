@@ -27,6 +27,15 @@ GATED_SUFFIX = "_rounds_per_s"
 DEFAULT_CURRENT = "BENCH_round_engine.json"
 DEFAULT_BASELINE = "benchmarks/baselines/BENCH_round_engine.json"
 
+# gated by default when invoked with no --current/--baseline: every
+# committed baseline, against the artifact its bench writes
+DEFAULT_PAIRS = [
+    ("BENCH_round_engine.json",
+     "benchmarks/baselines/BENCH_round_engine.json"),
+    ("BENCH_sharded_engine.json",
+     "benchmarks/baselines/BENCH_sharded_engine.json"),
+]
+
 
 def compare(current: Dict, baseline: Dict, threshold: float = 0.25,
             suffix: str = GATED_SUFFIX) -> List[str]:
@@ -49,26 +58,43 @@ def compare(current: Dict, baseline: Dict, threshold: float = 0.25,
     return failures
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--current", default=DEFAULT_CURRENT,
-                    help="fresh benchmark JSON (default: %(default)s)")
-    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
-                    help="committed baseline JSON (default: %(default)s)")
-    ap.add_argument("--threshold", type=float, default=0.25,
-                    help="max allowed fractional drop (default: 0.25)")
-    args = ap.parse_args(argv)
+def _gate_pair(cur_path: str, base_path: str, threshold: float) -> List[str]:
+    current = json.loads(Path(cur_path).read_text())
+    baseline = json.loads(Path(base_path).read_text())
+    failures = compare(current, baseline, threshold=threshold)
 
-    current = json.loads(Path(args.current).read_text())
-    baseline = json.loads(Path(args.baseline).read_text())
-    failures = compare(current, baseline, threshold=args.threshold)
-
+    print(f"{cur_path} vs {base_path}:")
     for key in sorted(baseline):
         if key.endswith(GATED_SUFFIX) and isinstance(baseline[key],
                                                      (int, float)):
             cur = current.get(key)
             shown = f"{cur:.2f}" if isinstance(cur, (int, float)) else "—"
             print(f"  {key}: {shown} (baseline {baseline[key]:.2f})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=None,
+                    help=f"fresh benchmark JSON (default: {DEFAULT_CURRENT};"
+                         " with no --current/--baseline every committed"
+                         " baseline pair is gated)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional drop (default: 0.25)")
+    args = ap.parse_args(argv)
+
+    if args.current is not None or args.baseline is not None:
+        pairs = [(args.current or DEFAULT_CURRENT,
+                  args.baseline or DEFAULT_BASELINE)]
+    else:
+        pairs = DEFAULT_PAIRS
+
+    failures = []
+    for cur_path, base_path in pairs:
+        failures.extend(_gate_pair(cur_path, base_path, args.threshold))
     if failures:
         print(f"\nBENCH REGRESSION ({len(failures)}):", file=sys.stderr)
         for f in failures:

@@ -14,40 +14,54 @@ import numpy as np
 
 from repro.compress import build_link_policy
 from repro.core import CloudTopology, CostModel
+from repro.telemetry import ListSink, Telemetry, report
+from repro.telemetry.schema import RunContext
 
 GB = 1024 ** 3
 MB = 1024 ** 2
 
+POLICIES = [
+    ("fp32 / none", "none", {}),
+    ("topk 0.1 / cross_only", "topk", {"ratio": 0.1}),
+    ("topk 0.1 / all", "topk", {"ratio": 0.1, "link_policy": "all"}),
+    ("qsgd 5-bit / cross_only", "qsgd", {"levels": 15}),
+]
+
+
+def fl_policy_events(n_clouds: int = 3, clients_per_cloud: int = 30,
+                     d_params: int = 600_000) -> list:
+    """One synthetic ``round`` telemetry event per compression policy
+    (full participation, hierarchical) — the FL wire breakdown expressed
+    as the same event stream every engine driver emits, so the table
+    below is rendered by the shared ``repro.telemetry.report`` path."""
+    topo = CloudTopology.even(n_clouds, clients_per_cloud)
+    sel = np.ones(topo.n_clients, bool)
+    sink = ListSink()
+    with Telemetry(sink) as tel:
+        for name, kind, kw in POLICIES:
+            lp = build_link_policy(kind, **kw)
+            client, edge = lp.payload_vectors(topo, d_params)
+            ctx = RunContext(
+                tel, engine="host", run_id=name, method="cost_trustfl",
+                attack="none", seed=0, topo=topo, d_params=d_params,
+                hierarchical=True, m_selected=topo.n_clients,
+                malicious=np.zeros(topo.n_clients, bool),
+                client_payload=client, edge_payload=edge)
+            ctx.round(0, sel, np.ones(topo.n_clients), 0.0)
+    return sink.events
+
 
 def fl_breakdown(n_clouds: int = 3, clients_per_cloud: int = 30,
-                 d_params: int = 600_000) -> None:
+                 d_params: int = 600_000) -> str:
     """Per-round intra/cross wire bytes + $ for the simulation topology
-    under each compression policy (CostModel.bytes_per_round)."""
-    topo = CloudTopology.even(n_clouds, clients_per_cloud)
-    cm = CostModel()
-    sel = np.ones(topo.n_clients, bool)
-    policies = [
-        ("fp32 / none", build_link_policy("none")),
-        ("topk 0.1 / cross_only", build_link_policy("topk", ratio=0.1)),
-        ("topk 0.1 / all", build_link_policy("topk", ratio=0.1,
-                                             link_policy="all")),
-        ("qsgd 5-bit / cross_only", build_link_policy("qsgd", levels=15)),
-    ]
-    print(f"\nFL round wire breakdown ({n_clouds}x{clients_per_cloud} "
-          f"clients, d={d_params:,}, full participation, hierarchical):")
-    print(f"{'policy':26s}{'intra MB':>10s}{'cross MB':>10s}"
-          f"{'$/round':>10s}{'cross vs fp32':>15s}")
-    print("-" * 71)
-    base_cross = None
-    for name, lp in policies:
-        client, edge = lp.payload_vectors(topo, d_params)
-        b = cm.bytes_per_round(topo, sel, d_params, client_payload=client,
-                               edge_payload=edge)
-        dollars = cm.round_cost(topo, sel, d_params, client_payload=client,
-                                edge_payload=edge)
-        base_cross = base_cross if base_cross is not None else b["cross"]
-        print(f"{name:26s}{b['intra'] / MB:10.2f}{b['cross'] / MB:10.2f}"
-              f"{dollars:10.6f}{base_cross / max(b['cross'], 1):14.2f}x")
+    under each compression policy, built from telemetry events alone
+    (tests/test_telemetry.py asserts this table agrees with a direct
+    ``CostModel`` computation)."""
+    events = fl_policy_events(n_clouds, clients_per_cloud, d_params)
+    rows = report.wire_breakdown(events)
+    return (f"\nFL round wire breakdown ({n_clouds}x{clients_per_cloud} "
+            f"clients, d={d_params:,}, full participation, hierarchical):\n"
+            + report.render_wire_table(rows, label_header="policy"))
 
 
 def main() -> None:
@@ -55,7 +69,14 @@ def main() -> None:
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--steps-per-round", type=int, default=1,
                     help="train steps per FL round (local epochs)")
+    ap.add_argument("--events", default=None, metavar="JSONL",
+                    help="render the wire breakdown from a recorded "
+                         "telemetry JSONL instead of the dry-run sweep")
     args = ap.parse_args()
+    if args.events:
+        rows = report.wire_breakdown(report.load_events(args.events))
+        print(report.render_wire_table(rows))
+        return
     cm = CostModel()
 
     rows = []
@@ -84,7 +105,7 @@ def main() -> None:
           "aggregates cross the pod boundary (Eq. 5-6) — compare "
           "cross-pod vs intra columns.")
 
-    fl_breakdown()
+    print(fl_breakdown())
 
 
 if __name__ == "__main__":

@@ -5,11 +5,16 @@ surrogate. Prints per-round accuracy and the cumulative egress cost —
 the paper's two headline metrics (Table I + Fig. 3).
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--rounds 10]
+
+``--telemetry events.jsonl`` records both runs as a telemetry event
+stream; inspect with ``python -m repro.telemetry.report events.jsonl``.
 """
 import argparse
+import contextlib
 
 from repro.configs.base import FLConfig
 from repro.federated import run_simulation
+from repro.telemetry import Telemetry
 
 
 def main() -> None:
@@ -19,18 +24,26 @@ def main() -> None:
                     choices=["none", "label_flip", "gaussian", "sign_flip",
                              "scaling"])
     ap.add_argument("--malicious", type=float, default=0.3)
+    ap.add_argument("--telemetry", default=None, metavar="JSONL",
+                    help="record round/eval/span events to this file")
     args = ap.parse_args()
 
     fl = FLConfig(attack=args.attack, malicious_frac=args.malicious,
                   n_clouds=3, clients_per_cloud=6, clients_per_round=9,
                   local_epochs=2, local_batch=16, ref_samples=32)
 
+    tel = (Telemetry.to_jsonl(args.telemetry) if args.telemetry
+           else None)
     print(f"== Cost-TrustFL vs FedAvg | attack={args.attack} "
           f"({args.malicious:.0%} malicious) ==")
-    ours = run_simulation(fl, method="cost_trustfl", rounds=args.rounds,
-                          eval_every=2, verbose=True)
-    base = run_simulation(fl, method="fedavg", rounds=args.rounds,
-                          eval_every=2, verbose=True)
+    with (tel if tel is not None else contextlib.nullcontext()):
+        ours = run_simulation(fl, method="cost_trustfl",
+                              rounds=args.rounds, eval_every=2,
+                              telemetry=tel, verbose=True)
+        base = run_simulation(fl, method="fedavg", rounds=args.rounds,
+                              eval_every=2, telemetry=tel, verbose=True)
+    if args.telemetry:
+        print(f"telemetry: {args.telemetry}")
 
     print("\n--- summary -------------------------------------------")
     print(f"Cost-TrustFL : acc={ours.final_accuracy:.4f}  "

@@ -56,6 +56,8 @@ from repro.core.selection import (exploration_quota,
 from repro.data.pipeline import FederatedData
 from repro.federated import client as client_mod
 from repro.scenarios.base import JitHooks, Scenario
+from repro.telemetry import taps as taps_mod
+from repro.telemetry.taps import TapSpec
 
 Array = jax.Array
 
@@ -104,6 +106,8 @@ class RoundOut(NamedTuple):
     cost: Array                  # () $ this round (float32 mirror)
     intra_bytes: Array           # () wire bytes, intra-class
     cross_bytes: Array           # () wire bytes, cross-cloud
+    params_l2: Array             # () L2 of the post-update params — the
+                                 # RoundState digest telemetry fingerprints
 
 
 class ClientData(NamedTuple):
@@ -171,6 +175,14 @@ class EngineStatic:
 
 # ---------------------------------------------------------------------------
 # flat-vector plumbing
+
+def tree_l2(tree) -> Array:
+    """L2 norm over every leaf of a pytree (float32 scalar) — the cheap
+    in-graph state digest both device engines emit per round (and the
+    host loop mirrors via one tiny jitted reduce)."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                        for l in jax.tree.leaves(tree)))
+
 
 def ravel_rows(tree) -> Array:
     """Flatten a pytree with leading batch axis into (B, D), in
@@ -256,6 +268,15 @@ def build_select_fn(st: "EngineStatic") -> Tuple[Callable, int]:
         return jnp.zeros((n,), bool).at[perm[:m_total]].set(True)
 
     return select, m_total
+
+
+def selected_total(st: "EngineStatic") -> int:
+    """Static population of the selected set for this config — the
+    ``n_selected`` every telemetry round event reports (see
+    ``core.selection.selected_count``)."""
+    quota = exploration_quota(st.cost_lambda) if st.hierarchical else 0
+    return selected_count(st.n_clients, st.clients_per_round, quota,
+                          np.array(st.cloud_of))
 
 
 def build_deliver_fn(st: "EngineStatic") -> Callable:
@@ -522,10 +543,28 @@ class CompiledEngine:
                                      delivered_rounds, t0=t0)
 
 
+def compiled(static: EngineStatic,
+             tap: Optional[TapSpec] = None) -> CompiledEngine:
+    """Build (once per (config, tap)) the pure ``round_step`` and its
+    jitted step / scan / vmapped-scan drivers.
+
+    ``tap`` — an optional ``repro.telemetry.taps.TapSpec``: when
+    enabled, the ``step`` and ``run`` drivers stream ``(t, RoundOut)``
+    to the host after every round via an ordered ``jax.debug.callback``
+    (install a consumer with ``taps.collecting``); when ``None`` or
+    disabled, the build is IDENTICAL to one that never heard of
+    telemetry — a disabled tap normalizes to the untapped cache entry,
+    so it is the SAME executable, zero added ops. Ordered callbacks
+    cannot cross ``vmap``, so the multi-seed batch drivers always run
+    untapped and telemetry replays their stacked outputs post-run."""
+    if tap is not None and not tap.enabled:
+        tap = None
+    return _compiled(static, tap)
+
+
 @lru_cache(maxsize=None)
-def compiled(static: EngineStatic) -> CompiledEngine:
-    """Build (once per config) the pure ``round_step`` and its jitted
-    step / scan / vmapped-scan drivers."""
+def _compiled(static: EngineStatic,
+              tap: Optional[TapSpec]) -> CompiledEngine:
     st = static
     topo = st.topology()
     n, k = topo.n_clients, topo.n_clouds
@@ -577,51 +616,57 @@ def compiled(static: EngineStatic) -> CompiledEngine:
 
     def round_step(state: RoundState, data: ClientData, t
                    ) -> Tuple[RoundState, RoundOut]:
+        # phase scopes (jax.named_scope) label the emitted ops for
+        # profiler traces / HLO metadata — they change nothing at runtime
         t = jnp.asarray(t, jnp.int32)
         key = round_key(state.seed, t)
         mult = price_arr[jnp.mod(t, n_mult)] if n_mult > 1 else price_arr[0]
         c_cross_t = st.c_cross * mult
 
-        sel = _select(state.rep_ema, c_cross_t,
-                      jax.random.fold_in(key, _FOLD_SELECT))
-        delivered = _deliver(sel, jax.random.fold_in(key, _FOLD_DROPOUT))
-        sel_idx = jnp.nonzero(sel, size=m_total, fill_value=0)[0]
-        valid = delivered[sel_idx]                       # (m_total,) bool
+        with jax.named_scope("round.select"):
+            sel = _select(state.rep_ema, c_cross_t,
+                          jax.random.fold_in(key, _FOLD_SELECT))
+            delivered = _deliver(sel, jax.random.fold_in(key, _FOLD_DROPOUT))
+            sel_idx = jnp.nonzero(sel, size=m_total, fill_value=0)[0]
+            valid = delivered[sel_idx]                   # (m_total,) bool
 
         # local training over the fixed-size selected set (dropped
         # clients train too — fixed shapes — but are masked below)
-        keys = jax.random.split(key, n)
-        upd_tree = train_sel(state.params, data.client_x[sel_idx],
-                             data.client_y[sel_idx], keys[sel_idx])
-        flat_sel = ravel_rows(upd_tree)                  # (m_total, D)
+        with jax.named_scope("round.train"):
+            keys = jax.random.split(key, n)
+            upd_tree = train_sel(state.params, data.client_x[sel_idx],
+                                 data.client_y[sel_idx], keys[sel_idx])
+            flat_sel = ravel_rows(upd_tree)              # (m_total, D)
 
         # update-level attacks on this round's ACTIVE malicious clients
-        mal = data.malicious
-        if st.malice_warmup > 0:
-            mal = mal & (t >= st.malice_warmup)
-        mal_sel = mal[sel_idx] & valid
-        flat_sel = apply_update_attack(
-            st.attack, flat_sel, mal_sel, key, sigma=st.gaussian_sigma,
-            scale=st.attack_scale, z=st.attack_z,
-            valid=valid if st.p_drop > 0 else None)
+        with jax.named_scope("round.attack"):
+            mal = data.malicious
+            if st.malice_warmup > 0:
+                mal = mal & (t >= st.malice_warmup)
+            mal_sel = mal[sel_idx] & valid
+            flat_sel = apply_update_attack(
+                st.attack, flat_sel, mal_sel, key, sigma=st.gaussian_sigma,
+                scale=st.attack_scale, z=st.attack_z,
+                valid=valid if st.p_drop > 0 else None)
 
         # client uplink wire (EF residuals gathered/scattered from state)
         res_client = state.res_client
         if client_wire_active:
-            ckey = jax.random.fold_in(key, _FOLD_CLIENT_WIRE)
-            cur = res_client[sel_idx]
-            if hier:   # every client→edge hop is intra-class
-                flat_sel, cur = ef_step_masked(lp.intra, flat_sel, cur,
-                                               valid, ckey)
-            else:      # flat path: intra or cross by co-location
-                same = cloud_of_j[sel_idx] == agg
-                flat_sel, cur = ef_step_masked(
-                    lp.intra, flat_sel, cur, valid & same,
-                    jax.random.fold_in(ckey, 0))
-                flat_sel, cur = ef_step_masked(
-                    lp.cross, flat_sel, cur, valid & ~same,
-                    jax.random.fold_in(ckey, 1))
-            res_client = res_client.at[sel_idx].set(cur)
+            with jax.named_scope("round.compress"):
+                ckey = jax.random.fold_in(key, _FOLD_CLIENT_WIRE)
+                cur = res_client[sel_idx]
+                if hier:   # every client→edge hop is intra-class
+                    flat_sel, cur = ef_step_masked(lp.intra, flat_sel, cur,
+                                                   valid, ckey)
+                else:      # flat path: intra or cross by co-location
+                    same = cloud_of_j[sel_idx] == agg
+                    flat_sel, cur = ef_step_masked(
+                        lp.intra, flat_sel, cur, valid & same,
+                        jax.random.fold_in(ckey, 0))
+                    flat_sel, cur = ef_step_masked(
+                        lp.cross, flat_sel, cur, valid & ~same,
+                        jax.random.fold_in(ckey, 1))
+                res_client = res_client.at[sel_idx].set(cur)
 
         # trust statistics read the attacked+compressed wire view
         if st.p_drop > 0:
@@ -630,98 +675,106 @@ def compiled(static: EngineStatic) -> CompiledEngine:
 
         res_edge = state.res_edge
         new_rep = state.rep_ema
-        if hier:
-            # compact Eq. 5–13: the same pipeline as
-            # core.cost_trustfl_aggregate, but over the (m_total, D)
-            # selected rows instead of a zero-padded (N, D) scatter —
-            # aggregation traffic scales with the round's participants,
-            # not the fleet (N/m× less memory movement, and the vmapped
-            # multi-seed batch stays cache-resident)
-            eps = 1e-12
-            f32 = flat_sel.dtype
-            ref_tree = train_ref(state.params, data.ref_x, data.ref_y, key)
-            ref_flat = ravel_rows(ref_tree)
-            ref_ll = ref_flat[:, ll_idx]
-            sel_cloud = cloud_of_j[sel_idx]                       # (m,)
-            onehot = jax.nn.one_hot(sel_cloud, k, dtype=f32)      # (m, K)
-            w = valid.astype(f32)
-
-            # Eq. 7 with the median-damped norm factor (see core)
-            gbar = (w @ ll_sel) / jnp.maximum(jnp.sum(w), 1.0)
-            norms = jnp.linalg.norm(ll_sel, axis=1)
-            med = jnp.nanmedian(jnp.where(w > 0, norms, jnp.nan))
-            damp = jnp.minimum(1.0, (med / jnp.maximum(norms, eps)) ** 2)
-            damp = jnp.where(jnp.isnan(damp), 1.0, damp)
-            phi = gradient_contribution(ll_sel, gbar) * damp * w
-
-            # Eq. 8–9: normalize over the round (non-selected φ are 0),
-            # EMA only for delivered participants
-            total = jnp.sum(phi)
-            r = jnp.where(total > eps, phi / jnp.maximum(total, eps),
-                          1.0 / n)
-            rep_sel = (st.ema_gamma * state.rep_ema[sel_idx]
-                       + (1.0 - st.ema_gamma) * r)
-            rep_sel = jnp.where(valid, rep_sel, state.rep_ema[sel_idx])
-            new_rep = state.rep_ema.at[sel_idx].set(rep_sel)
-
-            # Eq. 11: trust vs. the client's own cloud reference
-            ref_ll_sel = ref_ll[sel_cloud]                        # (m, L)
-            dots = jnp.sum(ll_sel * ref_ll_sel, axis=1)
-            cos = dots / jnp.maximum(
-                norms * jnp.linalg.norm(ref_ll_sel, axis=1), eps)
-            ts = jax.nn.relu(cos) * rep_sel * w
-
-            # Eq. 12: rescale to own-cloud reference norm
-            ref_norms = jnp.linalg.norm(ref_flat, axis=1)         # (K,)
-            g_tilde = flat_sel * (ref_norms[sel_cloud] / jnp.maximum(
-                jnp.linalg.norm(flat_sel, axis=1), eps))[:, None]
-
-            # Eq. 13 per cloud (intra-cloud phase, Eq. 5)
-            ts_cloud = onehot.T @ ts                              # (K,)
-            cloud_aggs = (onehot.T @ (g_tilde * ts[:, None])
-                          / jnp.maximum(ts_cloud, eps)[:, None])
-            if edge_wire_active:
-                active = (onehot.T @ w > 0)[:, None]
-                cloud_aggs, res_edge = _edge_wire(
-                    cloud_aggs, res_edge, active,
-                    jax.random.fold_in(key, _FOLD_EDGE_WIRE))
-            # empty/zero-trust clouds fall back to their reference update
-            cloud_aggs = jnp.where((ts_cloud > eps)[:, None], cloud_aggs,
-                                   ref_flat)
-
-            # Eq. 6: cross-cloud phase, β_k from the global reference
-            beta = cloud_trust(cloud_aggs, jnp.mean(ref_flat, axis=0))
-            update = beta @ cloud_aggs
-        else:
-            u = flat_sel
-            if st.method == "fedavg":
-                if st.p_drop > 0:
-                    w = valid.astype(u.dtype)
-                    update = (w @ u) / jnp.maximum(jnp.sum(w), 1.0)
-                else:
-                    update = fedavg(u)
-            elif st.method == "krum":
-                update = krum(u, f_mal, multi=max(1, m_total - f_mal - 2))
-            elif st.method == "trimmed_mean":
-                update = trimmed_mean(u, trim_frac=st.malicious_frac / 2)
-            elif st.method == "median":
-                update = coordinate_median(u)
-            else:  # fltrust — zero (dropped) rows get ts=0, so it's
-                   # already masked-delivery safe
+        with jax.named_scope("round.aggregate"):
+            if hier:
+                # compact Eq. 5–13: the same pipeline as
+                # core.cost_trustfl_aggregate, but over the (m_total, D)
+                # selected rows instead of a zero-padded (N, D) scatter —
+                # aggregation traffic scales with the round's participants,
+                # not the fleet (N/m× less memory movement, and the vmapped
+                # multi-seed batch stays cache-resident)
+                eps = 1e-12
+                f32 = flat_sel.dtype
                 ref_tree = train_ref(state.params, data.ref_x, data.ref_y,
                                      key)
                 ref_flat = ravel_rows(ref_tree)
-                update = fltrust(u, jnp.mean(ref_flat, axis=0))
+                ref_ll = ref_flat[:, ll_idx]
+                sel_cloud = cloud_of_j[sel_idx]                   # (m,)
+                onehot = jax.nn.one_hot(sel_cloud, k, dtype=f32)  # (m, K)
+                w = valid.astype(f32)
 
-        # apply: w <- w - eta * g  (g is a model delta)
-        delta = unflatten_like(update * st.server_lr, state.params)
-        params = jax.tree.map(lambda w, g: w - g, state.params, delta)
+                # Eq. 7 with the median-damped norm factor (see core)
+                gbar = (w @ ll_sel) / jnp.maximum(jnp.sum(w), 1.0)
+                norms = jnp.linalg.norm(ll_sel, axis=1)
+                med = jnp.nanmedian(jnp.where(w > 0, norms, jnp.nan))
+                damp = jnp.minimum(1.0,
+                                   (med / jnp.maximum(norms, eps)) ** 2)
+                damp = jnp.where(jnp.isnan(damp), 1.0, damp)
+                phi = gradient_contribution(ll_sel, gbar) * damp * w
 
-        # byte-exact wire accounting (float32 in-graph mirror; the host
-        # drivers re-derive float64 totals from `delivered`)
-        intra_b, cross_b = round_bytes_jax(delivered, cloud_of_j, agg,
-                                           cp_j, ep_j, hierarchical=hier)
-        cost = (intra_b * st.c_intra + cross_b * c_cross_t) / _GB
+                # Eq. 8–9: normalize over the round (non-selected φ are
+                # 0), EMA only for delivered participants
+                total = jnp.sum(phi)
+                r = jnp.where(total > eps, phi / jnp.maximum(total, eps),
+                              1.0 / n)
+                rep_sel = (st.ema_gamma * state.rep_ema[sel_idx]
+                           + (1.0 - st.ema_gamma) * r)
+                rep_sel = jnp.where(valid, rep_sel, state.rep_ema[sel_idx])
+                new_rep = state.rep_ema.at[sel_idx].set(rep_sel)
+
+                # Eq. 11: trust vs. the client's own cloud reference
+                ref_ll_sel = ref_ll[sel_cloud]                    # (m, L)
+                dots = jnp.sum(ll_sel * ref_ll_sel, axis=1)
+                cos = dots / jnp.maximum(
+                    norms * jnp.linalg.norm(ref_ll_sel, axis=1), eps)
+                ts = jax.nn.relu(cos) * rep_sel * w
+
+                # Eq. 12: rescale to own-cloud reference norm
+                ref_norms = jnp.linalg.norm(ref_flat, axis=1)     # (K,)
+                g_tilde = flat_sel * (ref_norms[sel_cloud] / jnp.maximum(
+                    jnp.linalg.norm(flat_sel, axis=1), eps))[:, None]
+
+                # Eq. 13 per cloud (intra-cloud phase, Eq. 5)
+                ts_cloud = onehot.T @ ts                          # (K,)
+                cloud_aggs = (onehot.T @ (g_tilde * ts[:, None])
+                              / jnp.maximum(ts_cloud, eps)[:, None])
+                if edge_wire_active:
+                    active = (onehot.T @ w > 0)[:, None]
+                    cloud_aggs, res_edge = _edge_wire(
+                        cloud_aggs, res_edge, active,
+                        jax.random.fold_in(key, _FOLD_EDGE_WIRE))
+                # empty/zero-trust clouds fall back to their reference
+                cloud_aggs = jnp.where((ts_cloud > eps)[:, None],
+                                       cloud_aggs, ref_flat)
+
+                # Eq. 6: cross-cloud phase, β_k from the global reference
+                beta = cloud_trust(cloud_aggs, jnp.mean(ref_flat, axis=0))
+                update = beta @ cloud_aggs
+            else:
+                u = flat_sel
+                if st.method == "fedavg":
+                    if st.p_drop > 0:
+                        w = valid.astype(u.dtype)
+                        update = (w @ u) / jnp.maximum(jnp.sum(w), 1.0)
+                    else:
+                        update = fedavg(u)
+                elif st.method == "krum":
+                    update = krum(u, f_mal,
+                                  multi=max(1, m_total - f_mal - 2))
+                elif st.method == "trimmed_mean":
+                    update = trimmed_mean(u,
+                                          trim_frac=st.malicious_frac / 2)
+                elif st.method == "median":
+                    update = coordinate_median(u)
+                else:  # fltrust — zero (dropped) rows get ts=0, so it's
+                       # already masked-delivery safe
+                    ref_tree = train_ref(state.params, data.ref_x,
+                                         data.ref_y, key)
+                    ref_flat = ravel_rows(ref_tree)
+                    update = fltrust(u, jnp.mean(ref_flat, axis=0))
+
+            # apply: w <- w - eta * g  (g is a model delta)
+            delta = unflatten_like(update * st.server_lr, state.params)
+            params = jax.tree.map(lambda w, g: w - g, state.params, delta)
+
+        with jax.named_scope("round.account"):
+            # byte-exact wire accounting (float32 in-graph mirror; the
+            # host drivers re-derive float64 totals from `delivered`)
+            intra_b, cross_b = round_bytes_jax(delivered, cloud_of_j, agg,
+                                               cp_j, ep_j,
+                                               hierarchical=hier)
+            cost = (intra_b * st.c_intra + cross_b * c_cross_t) / _GB
+            digest = tree_l2(params)
 
         new_state = RoundState(
             params=params, rep_ema=new_rep, res_client=res_client,
@@ -730,22 +783,32 @@ def compiled(static: EngineStatic) -> CompiledEngine:
             cum_cross_bytes=state.cum_cross_bytes + cross_b,
             seed=state.seed)
         out = RoundOut(delivered=delivered, rep=new_rep, cost=cost,
-                       intra_bytes=intra_b, cross_bytes=cross_b)
+                       intra_bytes=intra_b, cross_bytes=cross_b,
+                       params_l2=digest)
         return new_state, out
 
-    step = jax.jit(round_step)
+    # the tapped step feeds ONLY the unbatched drivers; when the tap is
+    # off/absent this is round_step itself and nothing changes
+    tapped_step = taps_mod.instrument(round_step, tap)
+
+    step = jax.jit(tapped_step)
 
     def _scan(state, data, ts):
+        return jax.lax.scan(lambda c, t: tapped_step(c, data, t), state, ts)
+
+    def _scan_untapped(state, data, ts):
         return jax.lax.scan(lambda c, t: round_step(c, data, t), state, ts)
 
     scan_jit = jax.jit(_scan)
-    scan_batch_jit = jax.jit(jax.vmap(_scan, in_axes=(0, 0, None)))
+    # batch drivers vmap the UNTAPPED scan (ordered callbacks cannot
+    # cross vmap; multi-seed events are replayed post-run instead)
+    scan_batch_jit = jax.jit(jax.vmap(_scan_untapped, in_axes=(0, 0, None)))
     # seeds sharing one dataset: broadcast the sample arrays instead of
     # stacking S copies (labels and the adversary draw stay per-seed)
     _shared_axes = ClientData(client_x=None, client_y=0, ref_x=None,
                               ref_y=None, malicious=0)
     scan_batch_shared_jit = jax.jit(
-        jax.vmap(_scan, in_axes=(0, _shared_axes, None)))
+        jax.vmap(_scan_untapped, in_axes=(0, _shared_axes, None)))
 
     def run(state: RoundState, data: ClientData, rounds: int):
         """lax.scan the engine over ``rounds`` rounds — one device call."""

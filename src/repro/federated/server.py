@@ -12,7 +12,7 @@ per-round protocol.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from functools import lru_cache
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -27,17 +27,23 @@ from repro.core import (CloudTopology, CostModel, ReputationState,
                         apply_update_attack, cost_trustfl_aggregate,
                         coordinate_median, fedavg, fltrust, krum,
                         select_clients, trimmed_mean)
-from repro.core.selection import exploration_quota
+from repro.core.selection import exploration_quota, selected_count
 from repro.core.fl_types import RoundMetrics
 from repro.data.pipeline import FederatedData
 from repro.federated import client as client_mod
 from repro.federated import engine as engine_mod
-from repro.federated.engine import last_layer_spec, ravel_rows
+from repro.federated.engine import last_layer_spec, ravel_rows, tree_l2
 from repro.scenarios.base import Scenario
+from repro.telemetry import spans
+from repro.telemetry.schema import RunContext
 
 Array = jax.Array
 
 _REF_BATCH = engine_mod.REF_BATCH  # reference LocalTrain batch
+
+# the host loop's RoundState digest: one tiny jitted reduce over the
+# params pytree — the same function the device engines run in-graph
+_tree_l2_jit = jax.jit(tree_l2)
 
 
 @lru_cache(maxsize=None)
@@ -84,6 +90,13 @@ class FLServer:
     # malice (active_malicious)
     scenario: Optional[Scenario] = None
     engine: str = "auto"
+    # optional telemetry recorder (repro.telemetry.Telemetry or any
+    # object with emit(dict)): run_start on construction, a round event
+    # per run_round (identical across drivers given identical round
+    # outputs), compile/execute spans; run_id defaults to
+    # "<method>-s<seed>" so re-runs produce byte-comparable streams
+    telemetry: Optional[Any] = None
+    run_id: Optional[str] = None
 
     def __post_init__(self):
         key = jax.random.PRNGKey(self.seed)
@@ -148,6 +161,33 @@ class FLServer:
                 fl, self.topo, self.data, self.seed,
                 malicious=self.malicious, poisoned_y=self._poisoned_y)
             self._eng_state = self._eng.init_state(self.seed)
+        self.engine_resolved = resolved
+        self._stepped = False                 # first run_round compiles
+        self._telemetry_ctx: Optional[RunContext] = None
+        if self.telemetry is not None:
+            hier = self.method == "cost_trustfl"
+            h = engine_mod.hooks_of(self.scenario)
+            quota = exploration_quota(fl.cost_lambda) if hier else 0
+            m_total = selected_count(self.topo.n_clients,
+                                     fl.clients_per_round, quota,
+                                     self.topo.cloud_of)
+            cp, ep = self._link_payloads(hier)
+            self._telemetry_ctx = RunContext(
+                self.telemetry, engine=resolved,
+                run_id=(self.run_id if self.run_id is not None
+                        else f"{self.method}-s{self.seed}"),
+                method=self.method, attack=fl.attack, seed=self.seed,
+                topo=self.topo, d_params=self.d_params,
+                hierarchical=hier, m_selected=m_total,
+                malicious=self.malicious, client_payload=cp,
+                edge_payload=ep, c_intra=fl.c_intra, c_cross=fl.c_cross,
+                price_multipliers=h.price_multipliers,
+                malice_warmup=h.malice_warmup,
+                scenario=(self.scenario.name if self.scenario is not None
+                          else None))
+            self._telemetry_ctx.run_start(
+                config={f.name: getattr(fl, f.name)
+                        for f in fields(fl)})
 
     # -- selection (host path) -------------------------------------------------
     def _select(self, rng: np.random.Generator) -> np.ndarray:
@@ -236,9 +276,19 @@ class FLServer:
 
     # -- one round --------------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
-        if self._eng is not None:
-            return self._run_round_engine(t)
-        return self._run_round_host(t)
+        ctx = self._telemetry_ctx
+        if ctx is None:
+            if self._eng is not None:
+                return self._run_round_engine(t)
+            return self._run_round_host(t)
+        # span events separate compile (first round traces + compiles
+        # the step) from steady-state execute
+        phase = "execute" if self._stepped else "compile+execute"
+        with spans.span("round", ctx, phase=phase, t=t):
+            metrics = (self._run_round_engine(t) if self._eng is not None
+                       else self._run_round_host(t))
+        self._stepped = True
+        return metrics
 
     def _run_round_engine(self, t: int) -> RoundMetrics:
         """Engine driver: one jitted device call, then host-side float64
@@ -260,6 +310,13 @@ class FLServer:
                                reputation=np.array(state.rep_ema),
                                extra={"intra_bytes": intra_b,
                                       "cross_bytes": cross_b})
+        if self._telemetry_ctx is not None:
+            # same raw inputs and accounting floats as the scan stream
+            # collector → byte-identical round events across drivers
+            self._telemetry_ctx.round(
+                t, delivered, metrics.reputation, float(out.params_l2),
+                cost=float(cost), intra_bytes=float(intra_b),
+                cross_bytes=float(cross_b))
         self.history.append(metrics)
         return metrics
 
@@ -347,6 +404,15 @@ class FLServer:
                                reputation=np.array(self.rep.ema),
                                extra={"intra_bytes": intra_b,
                                       "cross_bytes": cross_b})
+        if self._telemetry_ctx is not None:
+            # explicit $ /bytes: only this loop knows prices a host hook
+            # may have mutated (self.cost_model); digest via the same
+            # tree_l2 the device engines run in-graph
+            self._telemetry_ctx.round(
+                t, sel, metrics.reputation,
+                float(_tree_l2_jit(self.params)),
+                cost=float(cost), intra_bytes=float(intra_b),
+                cross_bytes=float(cross_b))
         self.history.append(metrics)
         return metrics
 
@@ -388,3 +454,13 @@ class FLServer:
         return client_mod.accuracy(self.params,
                                    jnp.asarray(self.data.test_x),
                                    jnp.asarray(self.data.test_y))
+
+    # -- telemetry hooks (no-ops when no recorder is attached) ------------------
+    def record_eval(self, t: int, accuracy: float,
+                    loss: Optional[float] = None) -> None:
+        if self._telemetry_ctx is not None:
+            self._telemetry_ctx.eval(t, accuracy, loss)
+
+    def finish_telemetry(self) -> None:
+        if self._telemetry_ctx is not None:
+            self._telemetry_ctx.run_end()

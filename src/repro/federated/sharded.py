@@ -79,7 +79,8 @@ from repro.federated.engine import (ClientData, EngineStatic, LastLayerSpec,
                                     build_edge_wire_fn, build_select_fn,
                                     hooks_of, host_round_accounting,
                                     init_round_state, last_layer_spec,
-                                    ravel_rows, round_key, unflatten_like)
+                                    ravel_rows, round_key, tree_l2,
+                                    unflatten_like)
 from repro.scenarios.base import Scenario
 
 Array = jax.Array
@@ -536,7 +537,8 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
             cum_cross_bytes=state.cum_cross_bytes + cross_b,
             seed=state.seed)
         out = RoundOut(delivered=delivered, rep=new_rep, cost=cost,
-                       intra_bytes=intra_b, cross_bytes=cross_b)
+                       intra_bytes=intra_b, cross_bytes=cross_b,
+                       params_l2=tree_l2(params))
         return new_state, out
 
     # --- specs: the client axis of data/residuals is sharded over the
@@ -550,7 +552,8 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
                             ref_x=P(), ref_y=P(), malicious=P(AXES))
     out_specs = (state_specs,
                  RoundOut(delivered=P(), rep=P(), cost=P(),
-                          intra_bytes=P(), cross_bytes=P()))
+                          intra_bytes=P(), cross_bytes=P(),
+                          params_l2=P()))
 
     def _program(state, data, ts):
         def body(c, t):

@@ -3,8 +3,9 @@ protocol (3 clouds x 30 clients, Dirichlet non-IID, 4 attacks,
 6 methods)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Sequence, Union
+import time
+from dataclasses import dataclass, fields, replace
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +19,10 @@ from repro.federated import client as client_mod
 from repro.federated import engine as engine_mod
 from repro.federated.server import FLServer
 from repro.scenarios import Scenario, get_scenario
+from repro.telemetry import spans
+from repro.telemetry import taps as taps_mod
+from repro.telemetry.schema import RunContext
+from repro.telemetry.taps import TapSpec
 
 ScenarioLike = Union[str, Scenario, None]
 
@@ -56,12 +61,46 @@ def _resolve_scenario(scenario: ScenarioLike) -> Optional[Scenario]:
     return get_scenario(scenario) if isinstance(scenario, str) else scenario
 
 
+def _engine_context(telemetry: Any, *, engine_name: str, eng, flcfg: FLConfig,
+                    topo: CloudTopology, method: str,
+                    scenario: Optional[Scenario], seed: int,
+                    malicious: np.ndarray, rounds: int) -> RunContext:
+    """RunContext for a device-engine driver (scan or sharded), with
+    ``run_start`` already emitted — one construction path so the batch,
+    sharded and streaming drivers describe runs identically."""
+    st = eng.static
+    ctx = RunContext(
+        telemetry, engine=engine_name, run_id=f"{method}-s{seed}",
+        method=method, attack=flcfg.attack, seed=seed, topo=topo,
+        d_params=eng.d_params, hierarchical=st.hierarchical,
+        m_selected=engine_mod.selected_total(st), malicious=malicious,
+        client_payload=eng.client_payload, edge_payload=eng.edge_payload,
+        c_intra=st.c_intra, c_cross=st.c_cross,
+        price_multipliers=st.price_multipliers,
+        malice_warmup=st.malice_warmup,
+        scenario=scenario.name if scenario is not None else None)
+    ctx.run_start(rounds=rounds,
+                  config={f.name: getattr(flcfg, f.name)
+                          for f in fields(flcfg)})
+    return ctx
+
+
+def _replay_rounds(ctx: RunContext, delivered: np.ndarray,
+                   reps: np.ndarray, params_l2: np.ndarray) -> None:
+    """Emit round events from stacked (T, ...) RoundOut arrays — the
+    post-run path for drivers that cannot stream (vmapped batches, the
+    sharded engine whose per-shard callbacks would duplicate events)."""
+    for t in range(len(delivered)):
+        ctx.round(t, delivered[t], reps[t], float(params_l2[t]))
+
+
 def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
                    scenario: ScenarioLike = None,
                    dataset: str = "cifar10", rounds: Optional[int] = None,
                    eval_every: int = 5, seed: int = 0,
                    data: Optional[FederatedData] = None,
                    engine: str = "auto",
+                   telemetry: Any = None,
                    verbose: bool = False) -> SimResult:
     """Run one (method, scenario) simulation.
 
@@ -71,6 +110,9 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
     server. ``method`` defaults to ``flcfg.aggregator``; an explicit
     argument wins over the config field. ``engine`` is forwarded to
     ``FLServer`` (round-driver routing — see ``engine.resolve_engine``).
+    ``telemetry`` — an optional ``repro.telemetry.Telemetry`` recorder:
+    the server emits run_start / per-round / span events, this harness
+    adds eval events and the closing run_end.
     """
     scenario = _resolve_scenario(scenario)
     if scenario is not None:
@@ -80,7 +122,8 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
     topo = make_topology(flcfg)
     data = data if data is not None else make_data(flcfg, dataset, seed)
     server = FLServer(flcfg, topo, data, method=method, seed=seed,
-                      scenario=scenario, engine=engine)
+                      scenario=scenario, engine=engine,
+                      telemetry=telemetry)
 
     accs, ticks = [], []
     for t in range(rounds):
@@ -89,9 +132,11 @@ def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
             acc = server.evaluate()
             accs.append(acc)
             ticks.append(t + 1)
+            server.record_eval(t, acc)
             if verbose:
                 print(f"[{method}/{flcfg.attack}] round {t+1:4d} "
                       f"acc={acc:.4f} cum_cost=${server.cum_cost:.4f}")
+    server.finish_telemetry()
     # rounds=0 yields no evals -> final_accuracy None. FLServer always
     # carries rep today; the getattr keeps SimResult construction working
     # for server implementations without reputation state.
@@ -113,8 +158,8 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
                          scenario: ScenarioLike = None,
                          dataset: str = "cifar10",
                          rounds: Optional[int] = None,
-                         data: Optional[FederatedData] = None
-                         ) -> List[SimResult]:
+                         data: Optional[FederatedData] = None,
+                         telemetry: Any = None) -> List[SimResult]:
     """Device-resident multi-seed sweep: ``lax.scan`` over rounds,
     ``vmap`` over seeds — the whole grid cell is one jitted device call.
 
@@ -125,6 +170,13 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
     model init and adversary draw unless a shared ``data`` is passed.
     Requires a jittable (method, attack, scenario) combination — host-
     hook scenarios raise (run them through ``run_simulation``).
+
+    ``telemetry``: a single-seed batch streams its round events LIVE out
+    of the running scan (ordered ``jax.debug.callback`` tap — and those
+    events are byte-identical to the per-round ``FLServer`` driver's);
+    multi-seed batches run untapped (ordered callbacks cannot cross
+    vmap) and replay per-seed events from the stacked outputs after the
+    device call.
     """
     scenario = _resolve_scenario(scenario)
     if scenario is not None:
@@ -156,16 +208,41 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
         dev = [engine_mod.make_client_data(flcfg, topo, d, s)
                for d, s in zip(datas, seeds)]
     states = [eng.init_state(s) for s in seeds]
+    ctxs = None
+    if telemetry is not None:
+        ctxs = [_engine_context(telemetry, engine_name="jit", eng=eng,
+                                flcfg=flcfg, topo=topo, method=method,
+                                scenario=scenario, seed=s,
+                                malicious=np.asarray(dev[i].malicious),
+                                rounds=rounds)
+                for i, s in enumerate(seeds)]
+    streamed = False
 
     stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
+    t0 = time.perf_counter()
     if rounds == 0:
-        finals, delivered, reps = states, None, None
+        finals, delivered, reps, pl2 = states, None, None, None
     elif len(seeds) == 1:
         # unbatched scan: bit-identical to the per-round engine driver
-        fin, outs = eng.run(states[0], dev[0], rounds)
+        if ctxs is not None:
+            # live stream: compile the tapped executable and install the
+            # collector for the duration of the device call — collecting()
+            # drains the async callback queue before uninstalling
+            ctx = ctxs[0]
+            tapped = engine_mod.compiled(static, TapSpec(enabled=True))
+            collect = lambda t, out: ctx.round(
+                int(t), np.asarray(out.delivered), np.asarray(out.rep),
+                float(out.params_l2))
+            with taps_mod.collecting(collect):
+                fin, outs = tapped.run(states[0], dev[0], rounds)
+                jax.block_until_ready(outs.delivered)
+            streamed = True
+        else:
+            fin, outs = eng.run(states[0], dev[0], rounds)
         finals = [fin]
         delivered = np.asarray(outs.delivered)[None]       # (1, T, N)
         reps = np.asarray(outs.rep)[None]
+        pl2 = np.asarray(outs.params_l2)[None]
     elif data is not None:
         # one dataset shared across seeds: broadcast the sample arrays
         # (one device copy) and stack only the per-seed leaves (poisoned
@@ -181,6 +258,7 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
                   for i in range(len(seeds))]
         delivered = np.asarray(outs.delivered)             # (S, T, N)
         reps = np.asarray(outs.rep)
+        pl2 = np.asarray(outs.params_l2)
     else:
         fin, outs = eng.run_batch(jax.tree.map(stack, *states),
                                   jax.tree.map(stack, *dev), rounds)
@@ -188,6 +266,11 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
                   for i in range(len(seeds))]
         delivered = np.asarray(outs.delivered)             # (S, T, N)
         reps = np.asarray(outs.rep)
+        pl2 = np.asarray(outs.params_l2)
+    if ctxs is not None:
+        dt = time.perf_counter() - t0
+        for ctx in ctxs:
+            ctx.span("engine.run", dt, phase="compile+execute")
 
     results = []
     for i, s in enumerate(seeds):
@@ -207,6 +290,13 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
                             float(rows[:, 1].sum()),
                             float(rows[:, 2].sum()))
             rep = reps[i, -1]
+        if ctxs is not None:
+            ctx = ctxs[i]
+            if rounds > 0 and not streamed:
+                _replay_rounds(ctx, delivered[i], reps[i], pl2[i])
+            if acc:
+                ctx.eval(rounds - 1, float(acc[0]))
+            ctx.run_end()
         results.append(SimResult(
             method=method, attack=flcfg.attack, accuracy=acc, rounds=ticks,
             final_accuracy=acc[-1] if acc else None, total_cost=cost,
@@ -223,7 +313,8 @@ def run_simulation_sharded(flcfg: FLConfig, *,
                            dataset: str = "cifar10",
                            rounds: Optional[int] = None, seed: int = 0,
                            data: Optional[FederatedData] = None,
-                           n_devices: Optional[int] = None) -> SimResult:
+                           n_devices: Optional[int] = None,
+                           telemetry: Any = None) -> SimResult:
     """One simulation on the mesh-sharded engine
     (``repro.federated.sharded``): clients laid out over a
     ``("cloud", "client")`` device mesh, Eq. 5–13 as a two-stage
@@ -253,8 +344,15 @@ def run_simulation_sharded(flcfg: FLConfig, *,
     dev = eng.stage_data(engine_mod.make_client_data(
         flcfg, topo, data, seed, malicious=malicious))
     state = eng.init_state(seed)
+    ctx = (None if telemetry is None else
+           _engine_context(telemetry, engine_name="shard", eng=eng,
+                           flcfg=flcfg, topo=topo, method=method,
+                           scenario=scenario, seed=seed,
+                           malicious=np.asarray(malicious), rounds=rounds))
 
     if rounds == 0:
+        if ctx is not None:
+            ctx.run_end()
         return SimResult(method=method, attack=flcfg.attack, accuracy=[],
                          rounds=[], final_accuracy=None, total_cost=0.0,
                          reputation=np.array(state.rep_ema),
@@ -262,9 +360,19 @@ def run_simulation_sharded(flcfg: FLConfig, *,
                          scenario=(scenario.name if scenario is not None
                                    else None))
 
+    t0 = time.perf_counter()
     fin, outs = eng.run(state, dev, rounds)
     acc = client_mod.accuracy(fin.params, jnp.asarray(data.test_x),
                               jnp.asarray(data.test_y))
+    if ctx is not None:
+        # per-shard callbacks would emit one event per device; replay the
+        # stacked RoundOut instead (digests match scan to ~1e-4)
+        ctx.span("engine.run", time.perf_counter() - t0,
+                 phase="compile+execute")
+        _replay_rounds(ctx, np.asarray(outs.delivered),
+                       np.asarray(outs.rep), np.asarray(outs.params_l2))
+        ctx.eval(rounds - 1, float(acc))
+        ctx.run_end()
     # byte-exact float64 accounting from the delivered masks — the same
     # reduction every other engine driver performs
     rows = eng.host_round_accounting(np.asarray(outs.delivered))

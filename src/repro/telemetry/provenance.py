@@ -1,0 +1,46 @@
+"""Provenance stamps: make every artifact traceable to a commit and a
+host. ``benchmarks/*`` embed :func:`stamp` in their ``BENCH_*.json``
+and drivers attach it to ``run_start`` events, so a number in an
+artifact can always be tied to (code version, machine class, runtime).
+"""
+from __future__ import annotations
+
+import platform
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def _git(*args: str) -> Optional[str]:
+    try:
+        out = subprocess.run(["git", *args], cwd=_REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def stamp() -> Dict[str, Any]:
+    """Commit + host + runtime provenance (every field best-effort:
+    outside a git checkout the git keys are null, never an exception)."""
+    sha = _git("rev-parse", "HEAD")
+    status = _git("status", "--porcelain")
+    devices = jax.devices()
+    return {
+        "git_sha": sha,
+        "git_dirty": bool(status) if status is not None else None,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "n_devices": len(devices),
+        "device_kind": devices[0].device_kind if devices else None,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }

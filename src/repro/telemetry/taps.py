@@ -1,0 +1,82 @@
+"""In-graph event taps: stream per-round outputs out of a jitted
+``lax.scan`` while it runs.
+
+:func:`instrument` wraps an engine ``round_step`` with an **ordered**
+``jax.debug.callback`` that hands ``(t, RoundOut)`` to the host after
+every round — so a T-round device call reports live instead of going
+dark until the final block. The callback targets the module-level
+:func:`_dispatch` trampoline; the actual consumer is installed at *run*
+time with :func:`collecting`, so one compiled executable serves every
+run (and costs a no-op host call per round when nothing is listening).
+
+Compiles to nothing when disabled: ``instrument(step, None)`` and
+``instrument(step, TapSpec(enabled=False))`` return ``round_step``
+itself, and ``engine.compiled`` normalizes a disabled tap to the
+untapped cache entry — off and absent are the SAME executable, so the
+lowered HLO is identical by construction (asserted in
+tests/test_telemetry.py). The tap is therefore a compile-time choice —
+only an *enabled* tap builds a separate executable.
+
+Ordered callbacks cannot cross ``vmap``: the vmapped multi-seed batch
+drivers always run untapped (their per-round events are replayed from
+the stacked ``RoundOut`` after the run).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+# the current consumer: (t, out) -> None. Installed by `collecting`;
+# single-threaded use (matching the rest of the engine drivers).
+_collector: Optional[Callable[[Any, Any], None]] = None
+
+
+@dataclass(frozen=True)
+class TapSpec:
+    """Hashable tap configuration — part of the engine compile key."""
+    enabled: bool = True
+
+
+def _dispatch(t, out) -> None:
+    """The baked-in callback target: forwards to the installed
+    collector, no-op otherwise. ``t`` and ``out`` arrive as host numpy
+    arrays (``out`` keeps its ``RoundOut`` pytree structure)."""
+    if _collector is not None:
+        _collector(t, out)
+
+
+@contextmanager
+def collecting(fn: Callable[[Any, Any], None]):
+    """Install ``fn`` as the tap consumer for the duration of the
+    ``with`` body (restores the previous consumer on exit).
+
+    Exit waits on ``jax.effects_barrier()`` BEFORE uninstalling ``fn``:
+    callback dispatch is asynchronous, so without the barrier the tail
+    of a run could fire after the consumer is gone."""
+    global _collector
+    prev = _collector
+    _collector = fn
+    try:
+        yield
+    finally:
+        try:
+            jax.effects_barrier()
+        finally:
+            _collector = prev
+
+
+def instrument(round_step: Callable, tap: Optional[TapSpec]) -> Callable:
+    """``round_step`` with an ordered per-round event tap, or the
+    original function unchanged when the tap is off/absent."""
+    if tap is None or not tap.enabled:
+        return round_step
+
+    def tapped_step(state, data, t):
+        new_state, out = round_step(state, data, t)
+        jax.debug.callback(_dispatch, t, out, ordered=True)
+        return new_state, out
+
+    return tapped_step

@@ -1,0 +1,340 @@
+"""Telemetry contract tests.
+
+Three guarantees, in test order:
+
+1. **Zero ops when off** — an engine built with the tap disabled lowers
+   to HLO *string-identical* to a build that never heard of telemetry,
+   so turning the feature off costs literally nothing.
+2. **One schema, three engines** — the per-round JSONL emitted by the
+   per-round engine-backed ``FLServer`` driver and the single-seed
+   ``lax.scan`` live stream is byte-identical; the mesh-sharded engine
+   matches exactly on masks/bytes/$ and to 1e-4 on float digests; the
+   legacy host loop emits the same (schema-valid) records.
+3. **Sinks and reports hold up** — ring buffer is bounded, JSONL
+   flushes per event and survives an exception mid-run, the validator
+   catches malformed events, and the cost-report table is reproduced
+   from events alone.
+"""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "examples"))
+
+from repro.configs.base import FLConfig
+from repro.core import CloudTopology, CostModel
+from repro.federated import (FLServer, make_data, make_topology,
+                             run_simulation, run_simulation_batch,
+                             run_simulation_sharded)
+from repro.federated import engine as engine_mod
+from repro.telemetry import (ListSink, JsonlSink, RingBufferSink, TapSpec,
+                             Telemetry, encode, validate_event,
+                             validate_events)
+from repro.telemetry import report
+from repro.telemetry.schema import RunContext
+
+_FL = dict(n_clouds=3, clients_per_cloud=4, clients_per_round=6,
+           local_epochs=1, local_batch=8, ref_samples=16,
+           attack="sign_flip", malicious_frac=0.3, attack_scale=1.0)
+
+
+def _parity_setup():
+    fl = FLConfig(**_FL)
+    data = make_data(fl, "cifar10", seed=0, n_samples=600,
+                     samples_per_client=16)
+    return fl, data
+
+
+def _events(fn):
+    """Run ``fn(telemetry)`` and return the captured event list."""
+    sink = ListSink()
+    with Telemetry(sink) as tel:
+        fn(tel)
+    return sink.events
+
+
+def _rounds(events):
+    return [e for e in events if e["event"] == "round"]
+
+
+# ---------------------------------------------------------------------------
+# 1. zero ops when the tap is off
+
+
+def test_disabled_tap_lowers_to_identical_hlo():
+    """compiled(static, TapSpec(enabled=False)) IS compiled(static) —
+    a disabled tap normalizes to the untapped cache entry, so disabled
+    telemetry adds ZERO ops by construction: same executable, same
+    lowered HLO, not merely a cheap no-op callback."""
+    fl, data = _parity_setup()
+    topo = make_topology(fl)
+    static = engine_mod.static_from(fl, topo, "cost_trustfl",
+                                    input_shape=data.client_x.shape[2:],
+                                    n_classes=data.n_classes)
+    absent = engine_mod.compiled(static)
+    off = engine_mod.compiled(static, TapSpec(enabled=False))
+    assert off is absent
+    dev = engine_mod.make_client_data(fl, topo, data, 0)
+    st = absent.init_state(0)
+    txt_absent = absent.step.lower(st, dev, 0).as_text()
+    assert off.step.lower(st, dev, 0).as_text() == txt_absent
+
+    # and the enabled tap is a genuinely different build: same round
+    # math plus the ordered host callback (a custom_call in the HLO)
+    on = engine_mod.compiled(static, TapSpec(enabled=True))
+    assert on is not absent
+    assert on.step.lower(st, dev, 0).as_text() != txt_absent
+
+
+# ---------------------------------------------------------------------------
+# 2. one schema, three engines
+
+@pytest.mark.slow
+def test_round_events_byte_identical_server_vs_scan_stream():
+    """The per-round engine driver (FLServer engine="jit") and the
+    single-seed scan live stream emit byte-identical round JSONL."""
+    fl, data = _parity_setup()
+    ev_server = _events(lambda tel: run_simulation(
+        fl, rounds=4, eval_every=10, data=data, seed=0, engine="jit",
+        telemetry=tel))
+    ev_stream = _events(lambda tel: run_simulation_batch(
+        fl, seeds=[0], rounds=4, data=data, telemetry=tel))
+    assert validate_events(ev_server) == []
+    assert validate_events(ev_stream) == []
+    a = [encode(e) for e in _rounds(ev_server)]
+    b = [encode(e) for e in _rounds(ev_stream)]
+    assert len(a) == 4
+    assert a == b
+    # the stream arrives live and in scan order
+    assert [e["t"] for e in _rounds(ev_stream)] == [0, 1, 2, 3]
+
+
+@pytest.mark.slow
+def test_multi_seed_replay_matches_stream():
+    """Vmapped batches replay events post-run; for the same seed the
+    replayed records are byte-identical to the live stream's."""
+    fl, data = _parity_setup()
+    ev_multi = _events(lambda tel: run_simulation_batch(
+        fl, seeds=[0, 1], rounds=3, data=data, telemetry=tel))
+    ev_single = _events(lambda tel: run_simulation_batch(
+        fl, seeds=[0], rounds=3, data=data, telemetry=tel))
+    assert validate_events(ev_multi) == []
+    a = [encode(e) for e in _rounds(ev_multi) if e["seed"] == 0]
+    b = [encode(e) for e in _rounds(ev_single)]
+    assert a == b
+    # both seeds emitted a full run: start/rounds/eval/end each
+    for s in (0, 1):
+        kinds = [e["event"] for e in ev_multi if e.get("seed") == s
+                 or e.get("run_id", "").endswith(f"s{s}")]
+        assert kinds.count("run_start") == 1
+        assert kinds.count("run_end") == 1
+
+
+@pytest.mark.slow
+def test_sharded_engine_digests_match_scan():
+    """Sharded round events: masks/bytes/$ byte-exact vs the scan
+    stream, float digests within the documented 1e-4."""
+    fl, data = _parity_setup()
+    ev_scan = _events(lambda tel: run_simulation_batch(
+        fl, seeds=[0], rounds=3, data=data, telemetry=tel))
+    ev_shard = _events(lambda tel: run_simulation_sharded(
+        fl, rounds=3, data=data, seed=0, n_devices=1, telemetry=tel))
+    assert validate_events(ev_shard) == []
+    ra, rb = _rounds(ev_scan), _rounds(ev_shard)
+    assert len(ra) == len(rb) == 3
+    for a, b in zip(ra, rb):
+        assert b["engine"] == "shard"
+        for k in ("t", "n_selected", "n_delivered", "n_active_malicious",
+                  "intra_bytes", "cross_bytes", "cost", "cum_cost",
+                  "price_mult"):
+            assert a[k] == b[k], k
+        assert a["digest"]["delivered_sha"] == b["digest"]["delivered_sha"]
+        for k in ("params_l2", "rep_l2", "rep_sum"):
+            assert b["digest"][k] == pytest.approx(a["digest"][k],
+                                                   rel=1e-4, abs=1e-4)
+
+
+@pytest.mark.slow
+def test_host_loop_emits_schema_valid_events():
+    """The legacy host loop (different RNG path — schema parity only)
+    emits valid events whose totals agree with the server state."""
+    fl, data = _parity_setup()
+    sink = ListSink()
+    with Telemetry(sink) as tel:
+        topo = make_topology(fl)
+        server = FLServer(fl, topo, data, method="cost_trustfl", seed=0,
+                          engine="host", telemetry=tel)
+        for t in range(3):
+            server.run_round(t)
+        server.finish_telemetry()
+    assert validate_events(sink.events) == []
+    assert {e["engine"] for e in sink.events} == {"host"}
+    end = [e for e in sink.events if e["event"] == "run_end"][0]
+    assert end["cum_cost"] == pytest.approx(server.cum_cost)
+    assert end["rounds_emitted"] == 3
+    # host-side spans wrap every round (compile first, execute after)
+    spans = [e for e in sink.events if e["event"] == "span"]
+    assert [s["phase"] for s in spans][:2] == ["compile+execute", "execute"]
+
+
+@pytest.mark.slow
+def test_tap_overhead_within_budget():
+    """The live tap (callback + event build + sink) must not cripple
+    the scan engine. The bench reports the honest overhead number
+    (telemetry_overhead_pct, acceptance <= 5% steady-state); this CI
+    budget is deliberately loose to absorb runner noise."""
+    import time
+
+    fl, data = _parity_setup()
+    run = lambda tel: run_simulation_batch(fl, seeds=[0], rounds=6,
+                                           data=data, telemetry=tel)
+    run(None)                         # compile untapped
+    _events(run)                      # compile tapped
+    t0 = time.perf_counter()
+    run(None)
+    untapped = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _events(run)
+    tapped = time.perf_counter() - t0
+    assert tapped < 5 * untapped + 0.5
+
+
+# ---------------------------------------------------------------------------
+# 3. sinks, schema validation, reports
+
+
+def _round_event(**over):
+    topo = CloudTopology.even(2, 2)
+    ctx = RunContext(None, engine="jit", run_id="r", method="m", attack="a",
+                     seed=0, topo=topo, d_params=10, hierarchical=True,
+                     m_selected=4, malicious=np.zeros(4, bool))
+    ev = ctx.round(0, np.ones(4, bool), np.full(4, 0.5), 1.0)
+    ev.update(over)
+    return ev
+
+
+def test_validator_accepts_good_and_rejects_bad_events():
+    assert validate_event(_round_event()) == []
+    assert validate_event(_round_event(t="zero"))          # wrong type
+    assert validate_event(_round_event(engine="tpu"))      # unknown engine
+    assert validate_event(_round_event(cost=True))         # bool is not num
+    bad = _round_event()
+    del bad["digest"]
+    assert validate_event(bad)
+    bad = _round_event()
+    del bad["digest"]["delivered_sha"]
+    assert validate_event(bad)
+    assert validate_event({"schema": "nope", "event": "round"})
+    assert validate_event([1, 2])
+    errs = validate_events([_round_event(), _round_event(t=None)])
+    assert errs and errs[0].startswith("#1:")
+
+
+def test_ring_buffer_is_bounded():
+    sink = RingBufferSink(capacity=3)
+    for i in range(10):
+        sink.emit({"i": i})
+    assert sink.capacity == 3
+    assert [e["i"] for e in sink.events] == [7, 8, 9]
+    with pytest.raises(ValueError):
+        RingBufferSink(capacity=0)
+
+
+def test_jsonl_sink_flushes_per_event_and_survives_exception(tmp_path):
+    path = tmp_path / "events.jsonl"
+    with pytest.raises(RuntimeError):
+        with Telemetry(JsonlSink(path)) as tel:
+            tel.emit({"schema": "s", "event": "x", "i": 0})
+            tel.emit({"schema": "s", "event": "x", "i": 1})
+            raise RuntimeError("mid-run crash")
+    lines = path.read_text().splitlines()
+    assert [json.loads(l)["i"] for l in lines] == [0, 1]
+
+    sink = JsonlSink(tmp_path / "b.jsonl")
+    sink.emit({"a": 1})
+    sink.close()
+    sink.close()                       # idempotent
+    with pytest.raises(ValueError):
+        sink.emit({"a": 2})
+
+
+def test_telemetry_close_closes_all_sinks_despite_errors():
+    class Boom:
+        closed = False
+
+        def emit(self, ev):
+            pass
+
+        def close(self):
+            self.closed = True
+            raise OSError("disk gone")
+
+    a, b = Boom(), Boom()
+    tel = Telemetry(a, b)
+    with pytest.raises(OSError):
+        tel.close()
+    assert a.closed and b.closed
+
+
+def test_report_roundtrip_and_validate_only(tmp_path, capsys):
+    path = tmp_path / "ev.jsonl"
+    with Telemetry(JsonlSink(path)) as tel:
+        topo = CloudTopology.even(2, 2)
+        ctx = RunContext(tel, engine="jit", run_id="demo", method="m",
+                         attack="a", seed=0, topo=topo, d_params=100,
+                         hierarchical=True, m_selected=4,
+                         malicious=np.zeros(4, bool))
+        ctx.run_start(rounds=2)
+        for t in range(2):
+            ctx.round(t, np.ones(4, bool), np.full(4, 0.5), 1.0)
+        ctx.run_end()
+    events = report.load_events(path)
+    assert validate_events(events) == []
+    assert report.main([str(path), "--validate-only"]) == 0
+    assert report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "demo" in out and "cum_cost" in out
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"schema":"nope","event":"round"}\n')
+    assert report.main([str(bad), "--validate-only"]) == 1
+    notjson = tmp_path / "nj.jsonl"
+    notjson.write_text("{oops\n")
+    with pytest.raises(ValueError, match="nj.jsonl:1"):
+        report.load_events(notjson)
+
+
+def test_cost_report_table_agrees_with_cost_model():
+    """The example's FL wire breakdown is built from telemetry events
+    alone; assert the event-derived numbers equal a direct CostModel
+    computation for every policy."""
+    import cost_report
+
+    from repro.compress import build_link_policy
+
+    n_clouds, cpc, d = 3, 5, 20_000
+    events = cost_report.fl_policy_events(n_clouds, cpc, d)
+    assert validate_events(events) == []
+    rows = report.wire_breakdown(events)
+    assert [r["label"] for r in rows] == [p[0] for p in cost_report.POLICIES]
+
+    topo = CloudTopology.even(n_clouds, cpc)
+    cm = CostModel()
+    sel = np.ones(topo.n_clients, bool)
+    for row, (name, kind, kw) in zip(rows, cost_report.POLICIES):
+        lp = build_link_policy(kind, **kw)
+        client, edge = lp.payload_vectors(topo, d)
+        b = cm.bytes_per_round(topo, sel, d, client_payload=client,
+                               edge_payload=edge)
+        dollars = cm.round_cost(topo, sel, d, client_payload=client,
+                                edge_payload=edge)
+        assert row["intra_bytes"] == pytest.approx(float(b["intra"]))
+        assert row["cross_bytes"] == pytest.approx(float(b["cross"]))
+        assert row["cost"] == pytest.approx(float(dollars))
+
+    table = cost_report.fl_breakdown(n_clouds, cpc, d)
+    assert "policy" in table and "fp32 / none" in table
