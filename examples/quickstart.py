@@ -24,11 +24,16 @@ def main() -> None:
                     choices=["none", "label_flip", "gaussian", "sign_flip",
                              "scaling"])
     ap.add_argument("--malicious", type=float, default=0.3)
+    ap.add_argument("--trust-features", default="scalar",
+                    choices=["scalar", "multi"],
+                    help="Eq. 7 scalar score, or the adaptively-weighted "
+                         "multi-feature gate (repro.core.features)")
     ap.add_argument("--telemetry", default=None, metavar="JSONL",
                     help="record round/eval/span events to this file")
     args = ap.parse_args()
 
     fl = FLConfig(attack=args.attack, malicious_frac=args.malicious,
+                  trust_features=args.trust_features,
                   n_clouds=3, clients_per_cloud=6, clients_per_round=9,
                   local_epochs=2, local_batch=16, ref_samples=32)
 

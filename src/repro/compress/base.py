@@ -18,7 +18,7 @@ the decompressed x̂) honest under aggressive compression.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,23 +56,33 @@ class Codec:
     def decode(self, c: CompressedUpdate) -> Array:
         return c.data["values"]
 
-    def roundtrip(self, x: Array, key: Array) -> Array:
-        """decode(encode(x)) without materializing the wire form."""
+    def roundtrip(self, x: Array, key: Array,
+                  row_ids: Optional[Array] = None) -> Array:
+        """decode(encode(x)) without materializing the wire form.
+
+        ``row_ids`` (optional (N,) int) are the SENDER identities of the
+        rows — stochastic codecs fold them into their noise stream so a
+        client's randomness depends on who sent the row, never on where
+        the row happens to sit in the batch (the property that makes
+        QSGD shard-decomposable). Defaults to ``arange(N)``, which is
+        already the sender id for full-population batches such as the
+        (K,) edge uplinks."""
         return x
 
 
-def ef_step(codec: Codec, x: Array, residual: Array, key: Array
-            ) -> Tuple[Array, Array]:
+def ef_step(codec: Codec, x: Array, residual: Array, key: Array,
+            row_ids: Optional[Array] = None) -> Tuple[Array, Array]:
     """One error-feedback round: returns (x̂ transmitted, new residual)."""
     if codec.is_identity:
         return x, residual
     y = x + residual
-    x_hat = codec.roundtrip(y, key)
+    x_hat = codec.roundtrip(y, key, row_ids)
     return x_hat, y - x_hat
 
 
 def ef_step_masked(codec: Codec, x: Array, residual: Array, row_mask: Array,
-                   key: Array) -> Tuple[Array, Array]:
+                   key: Array, row_ids: Optional[Array] = None
+                   ) -> Tuple[Array, Array]:
     """Pure, fixed-shape EF round for the scanned engine: rows where
     ``row_mask`` is False pass through untouched and KEEP their residual
     (nothing crossed the wire for them). No mutable buffers — the caller
@@ -81,7 +91,7 @@ def ef_step_masked(codec: Codec, x: Array, residual: Array, row_mask: Array,
     if codec.is_identity:
         return x, residual
     y = x + residual
-    x_hat = codec.roundtrip(y, key)
+    x_hat = codec.roundtrip(y, key, row_ids)
     keep = row_mask[:, None]
     return (jnp.where(keep, x_hat, x),
             jnp.where(keep, y - x_hat, residual))

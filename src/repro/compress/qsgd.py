@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +45,20 @@ class QSGDCodec(Codec):
     def payload_bytes(self, d: int) -> int:
         return FP32_BYTES + math.ceil(d * self.bits_per_coord / 8)
 
-    def encode(self, x: Array, key: Array) -> CompressedUpdate:
+    def encode(self, x: Array, key: Array,
+               row_ids: Optional[Array] = None) -> CompressedUpdate:
         scale = jnp.max(jnp.abs(x), axis=1)                    # (N,)
-        noise = jax.random.uniform(key, x.shape)
+        # rounding noise is keyed PER SENDER (fold_in the row's client
+        # id), never per matrix layout: a client's noise stream is the
+        # same whether its row sits in a compact selected matrix, a
+        # shard-local block, or the host loop's delivered subset — the
+        # property the sharded engine's parity contract relies on.
+        if row_ids is None:
+            row_ids = jnp.arange(x.shape[0])
+        noise = jax.vmap(
+            lambda r: jax.random.uniform(jax.random.fold_in(key, r),
+                                         (x.shape[1],)))(
+            jnp.asarray(row_ids))
         q = ops.stochastic_quantize(x, scale, noise, levels=self.levels)
         return CompressedUpdate("qsgd", {"q": q, "scale": scale},
                                 tuple(x.shape),
@@ -55,6 +67,7 @@ class QSGDCodec(Codec):
     def decode(self, c: CompressedUpdate) -> Array:
         return ref.dequantize_ref(c.data["q"], c.data["scale"], self.levels)
 
-    def roundtrip(self, x: Array, key: Array) -> Array:
-        c = self.encode(x, key)
+    def roundtrip(self, x: Array, key: Array,
+                  row_ids: Optional[Array] = None) -> Array:
+        c = self.encode(x, key, row_ids)
         return self.decode(c).astype(x.dtype)

@@ -61,7 +61,7 @@ class TopKCodec(Codec):
         return out.at[rows, c.data["indices"]].set(
             c.data["values"].astype(jnp.float32))
 
-    def roundtrip(self, x: Array, key: Array) -> Array:
+    def roundtrip(self, x: Array, key: Array, row_ids=None) -> Array:
         if self.is_identity:
             return x
         masked = ops.topk_mask(x, k=self.k_for(x.shape[1]))

@@ -182,6 +182,10 @@ class FLConfig:
     compress_ratio: float = 0.1          # top-k kept fraction
     qsgd_levels: int = 15                # QSGD states = 2*levels+1 (5 bits)
     link_policy: str = "cross_only"      # none|cross_only|intra_only|all
+    # Eq. 7 contribution score: "scalar" = paper's norm-damped cosine,
+    # "multi" = scalar gated by the adaptive multi-feature trust vector
+    # (repro.core.features; OptiGradTrust/FLARE-style)
+    trust_features: str = "scalar"
 
 
 _ARCHES: Dict[str, ModelConfig] = {}

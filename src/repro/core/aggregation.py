@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import features as feats_mod
 from repro.core.reputation import ReputationState, ema_update, normalize_scores
 from repro.core.shapley import gradient_contribution
 from repro.core.trust import (cloud_trust, normalize_updates, trust_scores,
@@ -24,6 +25,9 @@ class AggregationResult(NamedTuple):
     trust: Array             # (N,) TS_i
     phi: Array               # (N,) raw contribution scores
     beta: Array              # (K,) cloud trust
+    features: Optional[Array] = None      # (N, F) multi-feature matrix
+    feat_sep: Optional[Array] = None      # (F,) updated separability EMA
+    feat_weights: Optional[Array] = None  # (F,) softmax mixing weights
 
 
 def cost_trustfl_aggregate(
@@ -38,6 +42,8 @@ def cost_trustfl_aggregate(
     gamma: float = 0.9,
     eps: float = 1e-12,
     cloud_transform: Optional[Callable[[Array], Array]] = None,
+    trust_features: str = "scalar",
+    feat_sep: Optional[Array] = None,
 ) -> AggregationResult:
     """Full Eq. 5–13 pipeline with a two-level (intra-cloud, cross-cloud)
     hierarchy. Non-selected clients are masked out of every sum.
@@ -52,6 +58,8 @@ def cost_trustfl_aggregate(
     n, d = updates.shape
     k = ref_updates.shape[0]
     selected = selected.astype(updates.dtype)                      # (N,)
+    onehot = jax.nn.one_hot(cloud_of, k, dtype=updates.dtype)      # (N, K)
+    ref_ll_per_client = onehot @ ref_last_layer                    # (N, L)
 
     # --- Eq. 7: contribution vs. the mean of *selected* last-layer grads.
     # The raw ‖g‖ factor in Eq. 7 lets norm-inflating adversaries
@@ -67,14 +75,29 @@ def cost_trustfl_aggregate(
     damp = jnp.where(jnp.isnan(damp), 1.0, damp)
     phi = gradient_contribution(last_layer, gbar) * damp * selected
 
+    # --- multi-feature gate (repro.core.features): phi is scaled by the
+    # adaptively-weighted feature vector; the scalar path is untouched.
+    features = new_feat_sep = feat_weights = None
+    if trust_features == "multi":
+        features = feats_mod.client_features(last_layer, ref_ll_per_client,
+                                             gbar, med, selected, eps)
+        sep_prev = (jnp.zeros((feats_mod.N_FEATURES,), jnp.float32)
+                    if feat_sep is None else jnp.asarray(feat_sep))
+        sep_round = feats_mod.separability(features, selected, eps)
+        new_feat_sep = (feats_mod.FEAT_SEP_RHO * sep_prev +
+                        (1.0 - feats_mod.FEAT_SEP_RHO) * sep_round)
+        feat_weights = feats_mod.feature_weights(new_feat_sep)
+        phi = phi * feats_mod.gate(features, new_feat_sep)
+    elif trust_features != "scalar":
+        raise ValueError(f"unknown trust_features {trust_features!r}; "
+                         "use 'scalar' or 'multi'")
+
     # --- Eq. 8–9
     r = normalize_scores(phi)
     new_rep = ema_update(rep_state, r, gamma, participated=selected > 0)
 
     # --- Eq. 11: trust vs. the client's own cloud reference
     ts = jnp.zeros((n,), updates.dtype)
-    onehot = jax.nn.one_hot(cloud_of, k, dtype=updates.dtype)      # (N, K)
-    ref_ll_per_client = onehot @ ref_last_layer                    # (N, L)
     g = last_layer
     dots = jnp.sum(g * ref_ll_per_client, axis=1)
     cos = dots / jnp.maximum(
@@ -107,4 +130,6 @@ def cost_trustfl_aggregate(
     update = beta @ cloud_aggs
 
     return AggregationResult(update=update, reputation=new_rep, trust=ts,
-                             phi=phi, beta=beta)
+                             phi=phi, beta=beta, features=features,
+                             feat_sep=new_feat_sep,
+                             feat_weights=feat_weights)

@@ -19,6 +19,9 @@ Enough", Xie et al. IPM, Shejwalkar & Houmansadr min-max):
                      pairwise-distance envelope (bisection, jittable)
   * ``collusion``  — colluders agree on one update (−scale · their mean)
     so mutual similarity mimics consensus
+  * ``alie_norm``  — reputation-aware ALIE: the evasion point is rescaled
+    to the honest MEDIAN norm, so the Eq. 7 median damp (which decays
+    with ‖g‖ past the median) reads the attacker as perfectly typical
 """
 from __future__ import annotations
 
@@ -84,6 +87,25 @@ def alie_attack(updates: Array, malicious: Array, z: float = 1.0,
     filters (trimmed mean, Krum distances) treat as benign."""
     mean, std = _honest_moments(updates, malicious, valid)
     return jnp.where(malicious[:, None], mean - z * std, updates)
+
+
+def alie_norm_attack(updates: Array, malicious: Array, z: float = 1.0,
+                     valid: Optional[Array] = None,
+                     eps: float = 1e-12) -> Array:
+    """Reputation-aware ALIE: the mean − z·std evasion point is rescaled
+    to the honest rows' MEDIAN norm. The scalar Eq. 7 defense damps
+    contributions by (med/‖g‖)² — an attacker sitting exactly at the
+    median norm takes no damping at all, so only richer per-update
+    signals (sign agreement, reference cosine — see
+    ``repro.core.features``) can tell it apart."""
+    mean, std = _honest_moments(updates, malicious, valid, eps)
+    point = mean - z * std
+    honest = ~malicious if valid is None else (~malicious) & valid
+    norms = jnp.linalg.norm(updates, axis=1)
+    med = jnp.nanmedian(jnp.where(honest, norms, jnp.nan))
+    med = jnp.where(jnp.isnan(med) | ~(med > 0), 1.0, med)
+    point = point * (med / jnp.maximum(jnp.linalg.norm(point), eps))
+    return jnp.where(malicious[:, None], point, updates)
 
 
 def ipm_attack(updates: Array, malicious: Array, scale: float = 2.0,
@@ -178,6 +200,9 @@ register_update_attack(
 register_update_attack(
     "alie", lambda u, m, k, *, sigma, scale, z, valid=None:
         alie_attack(u, m, z, valid))
+register_update_attack(
+    "alie_norm", lambda u, m, k, *, sigma, scale, z, valid=None:
+        alie_norm_attack(u, m, z, valid))
 register_update_attack(
     "ipm", lambda u, m, k, *, sigma, scale, z, valid=None:
         ipm_attack(u, m, scale, valid))

@@ -1,0 +1,193 @@
+"""Multi-feature trust scoring (OptiGradTrust / FLARE style).
+
+Eq. 7's scalar contribution score is a single norm-damped cosine — a
+one-dimensional view an adaptive adversary can sit exactly on top of
+(ALIE picks mean − z·std; a norm-matched variant also defeats the
+median damp). This module widens the per-client signal to a small
+feature vector computed in ONE pass over the delivered last-layer
+matrix, then learns how much each feature separates honest from
+malicious behaviour *online* via an EMA of per-feature separability
+(softmax-normalized, as in FLARE's adaptive dimensions).
+
+Features (all in [0, 1], all per-row so the sharded engine can compute
+them locally from globally-reduced ``gbar``/``med``):
+
+  f0 norm_profile    1 / (1 + |log(‖g_i‖ / med)|) — peaks at the
+                     selected-median norm, decays for both inflated and
+                     vanishing updates.
+  f1 ref_cosine      ReLU(cos(g_i, ref_k(i))) — direction agreement
+                     with the client's own-cloud reference update.
+  f2 sign_agreement  fraction of coordinates where sign(g_id) matches
+                     sign(ḡ_d) (zero coordinates count as disagreement,
+                     which makes zero-padding safe).
+  f3 loss_delta      saturating first-order loss-decrease proxy
+                     x / (1 + x) with
+                     x = ReLU(cos(g_i, ref)) · min(‖g_i‖/med, med/‖g_i‖)
+                     — the loss decrease a reference-gradient step
+                     attributes to client i, with the norm factor made
+                     SYMMETRIC around the selected median. The symmetry
+                     matters: on the raw inner product a scaling
+                     adversary inflates x linearly and reads as the
+                     round's best contributor, and a one-sided clip
+                     min(‖g‖, med) still hands every norm-inflator the
+                     maximal factor; min(r, 1/r) decays for inflated
+                     AND vanishing updates alike.
+
+The adaptive weighting needs a trustworthy supervision signal. The
+reputation EMA is NOT one: a sleeper adversary farms reputation while
+honest, so rep-supervised weights learn to favour exactly the features
+the attacker then scores well on (and Eq. 7's mean-anchored cosine is
+equally capturable — ALIE sits on the mean). The one signal clients
+cannot poison is the server's own reference gradient, the paper's
+Eq. 11 trust anchor — so per-feature separability is the POSITIVE
+PART of the weighted Pearson correlation between the feature and the
+ref-cosine anchor (``ANCHOR_FEATURE`` = f1) over delivered rows,
+EMA-tracked across rounds (``FEAT_SEP_RHO``) and softmax-normalized
+(temperature ``WEIGHT_TEMP``) into mixing weights. The anchor's own
+separability is 1 by definition; population-anchored features (norm
+profile, sign agreement) only earn weight in rounds where they
+corroborate the reference anchor, and the positive part zeroes any
+feature an adversary has captured (which shows up as anti-correlation
+with the anchor).
+
+The multi-feature score gates Eq. 7 with confidence proportional to
+the best separability seen so far:
+
+    phi_multi = phi_scalar · (1 − β + β · (F @ weights)),
+    β = max_f feat_sep_f ∈ [0, 1]
+
+so with no evidence (round 0, or features that never track reputation)
+the gate is exactly 1 — multi degrades to the scalar path instead of
+injecting noise — and it only bites where some feature demonstrably
+ranks the way reputation does (Eq. 8 normalizes away absolute scale).
+
+The fused Pallas pass lives in ``repro.kernels.trust_features``;
+:func:`client_features` is its jnp oracle and the implementation the
+engines trace.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+N_FEATURES = 4
+FEATURE_NAMES = ("norm_profile", "ref_cosine", "sign_agreement",
+                 "loss_delta")
+FEAT_SEP_RHO = 0.5      # EMA factor for per-feature separability
+WEIGHT_TEMP = 0.2       # softmax temperature over separability ∈ [0,1]
+ANCHOR_FEATURE = 1      # ref_cosine: the unpoisonable supervision anchor
+CONSENSUS_FEATURE = 0   # norm_profile: the direction-independent witness
+BETA_MAX = 0.3          # cap on the gate's multiplicative range
+
+
+def client_features(last_layer: Array,    # (m, L) delivered last-layer rows
+                    ref_rows: Array,      # (m, L) own-cloud reference rows
+                    gbar: Array,          # (L,) selected-mean last layer
+                    med: Array,           # scalar selected-median norm
+                    w: Array,             # (m,) delivery weights in {0,1}
+                    eps: float = 1e-12) -> Array:
+    """Per-client feature matrix (m, N_FEATURES); rows with w == 0 are
+    all-zero. ``med`` may be NaN/non-positive (empty selection) — it is
+    sanitized to 1 so the features stay finite."""
+    g = last_layer.astype(jnp.float32)
+    r = ref_rows.astype(jnp.float32)
+    wv = w.astype(jnp.float32)
+    med = jnp.asarray(med, jnp.float32)
+    med = jnp.where(jnp.isnan(med) | ~(med > 0), 1.0, med)
+
+    norms = jnp.linalg.norm(g, axis=1)                         # (m,)
+    ref_norms = jnp.linalg.norm(r, axis=1)
+    dots = jnp.sum(g * r, axis=1)
+
+    f0 = 1.0 / (1.0 + jnp.abs(jnp.log(jnp.maximum(norms, eps) / med)))
+    f1 = jax.nn.relu(dots / jnp.maximum(norms * ref_norms, eps))
+    f2 = jnp.mean((g * gbar.astype(jnp.float32)[None, :] > 0)
+                  .astype(jnp.float32), axis=1)
+    ratio = jnp.maximum(norms, eps) / med
+    profile = jnp.minimum(ratio, 1.0 / ratio)
+    x = f1 * profile
+    f3 = x / (1.0 + x)
+
+    feats = jnp.stack([f0, f1, f2, f3], axis=1)                # (m, F)
+    return feats * wv[:, None]
+
+
+def separability_sums(feats: Array,       # (m, F)
+                      w: Array            # (m,) delivery weights
+                      ) -> Array:
+    """The six weighted sums a Pearson correlation against the anchor
+    column needs, stacked as (6, F) so the sharded engine reduces them
+    in ONE psum: rows are [Σw, Σw·f, Σw·a, Σw·f², Σw·a², Σw·f·a]
+    (a = the ``ANCHOR_FEATURE`` column, broadcast over F)."""
+    wv = w.astype(jnp.float32)[:, None]                        # (m, 1)
+    f = feats.astype(jnp.float32)
+    r = f[:, ANCHOR_FEATURE][:, None]                          # (m, 1)
+    ones = jnp.ones_like(f)
+    return jnp.stack([
+        jnp.sum(wv * ones, axis=0),
+        jnp.sum(wv * f, axis=0),
+        jnp.sum(wv * r * ones, axis=0),
+        jnp.sum(wv * f * f, axis=0),
+        jnp.sum(wv * r * r * ones, axis=0),
+        jnp.sum(wv * f * r, axis=0),
+    ], axis=0)                                                 # (6, F)
+
+
+def separability_from_sums(sums: Array, eps: float = 1e-12) -> Array:
+    """ReLU(weighted Pearson corr(feature, anchor)) per feature, (F,).
+    Anti-correlated features (a captured signal — see module docstring)
+    and degenerate rounds (no delivered rows, or zero variance in
+    either marginal) yield 0, i.e. 'no evidence this round'. The
+    anchor's own entry is its self-correlation, 1, whenever it varies
+    at all."""
+    sw = jnp.maximum(sums[0], eps)
+    mean_f = sums[1] / sw
+    mean_r = sums[2] / sw
+    var_f = jnp.maximum(sums[3] / sw - mean_f ** 2, 0.0)
+    var_r = jnp.maximum(sums[4] / sw - mean_r ** 2, 0.0)
+    cov = sums[5] / sw - mean_f * mean_r
+    corr = cov / jnp.sqrt(jnp.maximum(var_f * var_r, eps * eps))
+    corr = jnp.where((var_f > eps) & (var_r > eps), corr, 0.0)
+    return jnp.clip(corr, 0.0, 1.0)
+
+
+def separability(feats: Array, w: Array, eps: float = 1e-12) -> Array:
+    """Single-host convenience: (F,) separability of this round."""
+    return separability_from_sums(separability_sums(feats, w), eps)
+
+
+def feature_weights(feat_sep: Array) -> Array:
+    """Softmax mixing weights from the EMA-tracked separability. With
+    no evidence yet (all-zero EMA) this is exactly uniform; the
+    temperature sharpens toward the features that track reputation."""
+    return jax.nn.softmax(feat_sep.astype(jnp.float32) / WEIGHT_TEMP)
+
+
+def gate_strength(feat_sep: Array) -> Array:
+    """Confidence β ∈ [0, BETA_MAX] of the multiplicative gate.
+
+    Confidence requires corroboration from an INDEPENDENT modality:
+    the separability the norm profile — the one feature that measures
+    norm typicality, not direction — has accumulated against the
+    direction anchor. Every other feature is itself direction-based
+    (the anchor trivially self-correlates at 1, the loss-delta proxy
+    shares its ReLU cosine factor, sign agreement is coordinate-wise
+    direction typicality), so their correlation with the anchor is not
+    evidence that the gate sees anything Eq. 7 does not — without the
+    two-modality requirement the gate fires confidently on attacks it
+    cannot see (pure scaling preserves direction exactly) and only
+    injects heterogeneity noise into near-tied scores. Capped at
+    BETA_MAX so the gate can only reorder clients whose scalar scores
+    are within a ~1/(1−BETA_MAX) ratio — a corrective nudge on top of
+    Eq. 7, never a replacement for it. Zero evidence → zero gate →
+    phi_multi ≡ phi_scalar."""
+    sep0 = feat_sep.astype(jnp.float32)[CONSENSUS_FEATURE]
+    return BETA_MAX * jnp.clip(sep0, 0.0, 1.0)
+
+
+def gate(feats: Array, feat_sep: Array) -> Array:
+    """The (m,) multiplicative trust gate: 1 − β + β·(F @ weights)."""
+    beta = gate_strength(feat_sep)
+    return 1.0 - beta + beta * (feats @ feature_weights(feat_sep))

@@ -48,6 +48,7 @@ from repro.core import (CloudTopology, CostModel, ReputationState,
                         apply_update_attack, coordinate_median, fedavg,
                         fltrust, krum, trimmed_mean)
 from repro.core.attacks import UPDATE_ATTACKS
+from repro.core import features as feats_mod
 from repro.core.shapley import gradient_contribution
 from repro.core.trust import cloud_trust
 from repro.core.cost import hierarchical_unit_costs_jax, round_bytes_jax
@@ -95,6 +96,8 @@ class RoundState(NamedTuple):
     cum_cost: Array              # () running $ (float32; host reduces f64)
     cum_intra_bytes: Array       # () running intra-class wire bytes
     cum_cross_bytes: Array       # () running cross-cloud wire bytes
+    feat_sep: Array              # (F,) per-feature separability EMA
+                                 # (trust_features="multi"; (0,) otherwise)
     seed: Array                  # () int32 PRNG root: round key = PRNGKey(seed·7919+t)
 
 
@@ -108,6 +111,8 @@ class RoundOut(NamedTuple):
     cross_bytes: Array           # () wire bytes, cross-cloud
     params_l2: Array             # () L2 of the post-update params — the
                                  # RoundState digest telemetry fingerprints
+    feat_weights: Array          # (F,) adaptive feature mixing weights
+                                 # (trust_features="multi"; (0,) otherwise)
 
 
 class ClientData(NamedTuple):
@@ -158,10 +163,17 @@ class EngineStatic:
     p_drop: float
     malice_warmup: int
     price_multipliers: Tuple[float, ...]
+    trust_features: str = "scalar"
 
     @property
     def hierarchical(self) -> bool:
         return self.method == "cost_trustfl"
+
+    @property
+    def multi_features(self) -> bool:
+        """Multi-feature trust gating is a cost_trustfl refinement — the
+        flat baselines have no Eq. 7 path for it to gate."""
+        return self.hierarchical and self.trust_features == "multi"
 
     @property
     def n_clients(self) -> int:
@@ -344,6 +356,8 @@ def init_round_state(st: "EngineStatic", d: int, seed: int, *,
                   if edge_wire_active else jnp.zeros((0,))),
         cum_cost=jnp.float32(0.0), cum_intra_bytes=jnp.float32(0.0),
         cum_cross_bytes=jnp.float32(0.0),
+        feat_sep=(jnp.zeros((feats_mod.N_FEATURES,), jnp.float32)
+                  if st.multi_features else jnp.zeros((0,))),
         seed=jnp.int32(seed))
 
 
@@ -456,6 +470,9 @@ def static_from(flcfg: FLConfig, topo: CloudTopology, method: str,
             f"scenario={getattr(scenario, 'name', None)!r} (host-hook "
             "scenario, unknown method, or dropout with an order-statistic "
             "aggregator) — use the host loop")
+    if flcfg.trust_features not in ("scalar", "multi"):
+        raise ValueError(f"unknown trust_features {flcfg.trust_features!r}; "
+                         "use 'scalar' or 'multi'")
     h = hooks_of(scenario)
     return EngineStatic(
         method=method, cloud_of=tuple(int(c) for c in topo.cloud_of),
@@ -472,7 +489,8 @@ def static_from(flcfg: FLConfig, topo: CloudTopology, method: str,
         compress_ratio=flcfg.compress_ratio, qsgd_levels=flcfg.qsgd_levels,
         link_policy=flcfg.link_policy, p_drop=float(h.p_drop),
         malice_warmup=int(h.malice_warmup),
-        price_multipliers=tuple(float(m) for m in h.price_multipliers))
+        price_multipliers=tuple(float(m) for m in h.price_multipliers),
+        trust_features=flcfg.trust_features)
 
 
 def draw_malicious(flcfg: FLConfig, n_clients: int, seed: int) -> np.ndarray:
@@ -657,15 +675,15 @@ def _compiled(static: EngineStatic,
                 cur = res_client[sel_idx]
                 if hier:   # every client→edge hop is intra-class
                     flat_sel, cur = ef_step_masked(lp.intra, flat_sel, cur,
-                                                   valid, ckey)
+                                                   valid, ckey, sel_idx)
                 else:      # flat path: intra or cross by co-location
                     same = cloud_of_j[sel_idx] == agg
                     flat_sel, cur = ef_step_masked(
                         lp.intra, flat_sel, cur, valid & same,
-                        jax.random.fold_in(ckey, 0))
+                        jax.random.fold_in(ckey, 0), sel_idx)
                     flat_sel, cur = ef_step_masked(
                         lp.cross, flat_sel, cur, valid & ~same,
-                        jax.random.fold_in(ckey, 1))
+                        jax.random.fold_in(ckey, 1), sel_idx)
                 res_client = res_client.at[sel_idx].set(cur)
 
         # trust statistics read the attacked+compressed wire view
@@ -675,6 +693,8 @@ def _compiled(static: EngineStatic,
 
         res_edge = state.res_edge
         new_rep = state.rep_ema
+        new_feat_sep = state.feat_sep
+        feat_w = jnp.zeros((0,), jnp.float32)
         with jax.named_scope("round.aggregate"):
             if hier:
                 # compact Eq. 5–13: the same pipeline as
@@ -692,6 +712,7 @@ def _compiled(static: EngineStatic,
                 sel_cloud = cloud_of_j[sel_idx]                   # (m,)
                 onehot = jax.nn.one_hot(sel_cloud, k, dtype=f32)  # (m, K)
                 w = valid.astype(f32)
+                ref_ll_sel = ref_ll[sel_cloud]                    # (m, L)
 
                 # Eq. 7 with the median-damped norm factor (see core)
                 gbar = (w @ ll_sel) / jnp.maximum(jnp.sum(w), 1.0)
@@ -701,6 +722,20 @@ def _compiled(static: EngineStatic,
                                    (med / jnp.maximum(norms, eps)) ** 2)
                 damp = jnp.where(jnp.isnan(damp), 1.0, damp)
                 phi = gradient_contribution(ll_sel, gbar) * damp * w
+
+                # multi-feature gate (core.features): phi scaled by the
+                # adaptively-weighted feature vector of each delivered
+                # row; separability labels come from the PREVIOUS
+                # reputation EMA (pre-Eq. 8–9 update)
+                if st.multi_features:
+                    feats = feats_mod.client_features(
+                        ll_sel, ref_ll_sel, gbar, med, w, eps)
+                    sep_round = feats_mod.separability(feats, w, eps)
+                    new_feat_sep = (
+                        feats_mod.FEAT_SEP_RHO * state.feat_sep
+                        + (1.0 - feats_mod.FEAT_SEP_RHO) * sep_round)
+                    feat_w = feats_mod.feature_weights(new_feat_sep)
+                    phi = phi * feats_mod.gate(feats, new_feat_sep)
 
                 # Eq. 8–9: normalize over the round (non-selected φ are
                 # 0), EMA only for delivered participants
@@ -713,7 +748,6 @@ def _compiled(static: EngineStatic,
                 new_rep = state.rep_ema.at[sel_idx].set(rep_sel)
 
                 # Eq. 11: trust vs. the client's own cloud reference
-                ref_ll_sel = ref_ll[sel_cloud]                    # (m, L)
                 dots = jnp.sum(ll_sel * ref_ll_sel, axis=1)
                 cos = dots / jnp.maximum(
                     norms * jnp.linalg.norm(ref_ll_sel, axis=1), eps)
@@ -781,10 +815,10 @@ def _compiled(static: EngineStatic,
             res_edge=res_edge, cum_cost=state.cum_cost + cost,
             cum_intra_bytes=state.cum_intra_bytes + intra_b,
             cum_cross_bytes=state.cum_cross_bytes + cross_b,
-            seed=state.seed)
+            feat_sep=new_feat_sep, seed=state.seed)
         out = RoundOut(delivered=delivered, rep=new_rep, cost=cost,
                        intra_bytes=intra_b, cross_bytes=cross_b,
-                       params_l2=digest)
+                       params_l2=digest, feat_weights=feat_w)
         return new_state, out
 
     # the tapped step feeds ONLY the unbatched drivers; when the tap is

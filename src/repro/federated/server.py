@@ -127,6 +127,11 @@ class FLServer:
         self.link_policy = policy_from_flcfg(self.flcfg)
         self._res_client: Optional[Array] = None    # (N, D) client uplinks
         self._res_edge: Optional[Array] = None      # (K, D) edge uplinks
+        # multi-feature trust state (trust_features="multi"): the (F,)
+        # separability EMA carried across rounds + the last round's
+        # softmax mixing weights (telemetry)
+        self._feat_sep: Optional[Array] = None
+        self._feat_weights: Optional[np.ndarray] = None
         self.cum_intra_bytes = 0.0
         self.cum_cross_bytes = 0.0
         # jit the hot paths ONCE, shared across servers with the same
@@ -184,7 +189,8 @@ class FLServer:
                 price_multipliers=h.price_multipliers,
                 malice_warmup=h.malice_warmup,
                 scenario=(self.scenario.name if self.scenario is not None
-                          else None))
+                          else None),
+                trust_features=fl.trust_features)
             self._telemetry_ctx.run_start(
                 config={f.name: getattr(fl, f.name)
                         for f in fields(fl)})
@@ -218,8 +224,10 @@ class FLServer:
             self._res_client = jnp.zeros(
                 (self.topo.n_clients, flat_sel.shape[1]), jnp.float32)
         rows = jnp.asarray(sel_ix[local_rows])
+        # rows carry their GLOBAL client ids into the codec so stochastic
+        # noise is keyed per sender, identically to the device engines
         x_hat, new_res = ef_step(codec, flat_sel[local_rows],
-                                 self._res_client[rows], key)
+                                 self._res_client[rows], key, rows)
         self._res_client = self._res_client.at[rows].set(new_res)
         return flat_sel.at[jnp.asarray(local_rows)].set(x_hat)
 
@@ -316,7 +324,10 @@ class FLServer:
             self._telemetry_ctx.round(
                 t, delivered, metrics.reputation, float(out.params_l2),
                 cost=float(cost), intra_bytes=float(intra_b),
-                cross_bytes=float(cross_b))
+                cross_bytes=float(cross_b),
+                feat_weights=(np.asarray(out.feat_weights)
+                              if np.asarray(out.feat_weights).size
+                              else None))
         self.history.append(metrics)
         return metrics
 
@@ -412,7 +423,8 @@ class FLServer:
                 t, sel, metrics.reputation,
                 float(_tree_l2_jit(self.params)),
                 cost=float(cost), intra_bytes=float(intra_b),
-                cross_bytes=float(cross_b))
+                cross_bytes=float(cross_b),
+                feat_weights=self._feat_weights)
         self.history.append(metrics)
         return metrics
 
@@ -429,8 +441,13 @@ class FLServer:
                 jnp.asarray(self.topo.cloud_of), sel_j, self.rep,
                 gamma=self.flcfg.ema_gamma,
                 cloud_transform=self._edge_transform(
-                    jax.random.fold_in(key, 223), sel))
+                    jax.random.fold_in(key, 223), sel),
+                trust_features=self.flcfg.trust_features,
+                feat_sep=self._feat_sep)
             self.rep = res.reputation
+            if res.feat_sep is not None:
+                self._feat_sep = res.feat_sep
+                self._feat_weights = np.asarray(res.feat_weights)
             return res.update, True
         sel_ix = jnp.nonzero(sel_j, size=int(sel.sum()))[0]
         u = flat[sel_ix]

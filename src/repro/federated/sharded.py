@@ -32,10 +32,12 @@ error-feedback residuals resident; per round it
 Support surface (``shard_unsupported_reason``): all six methods run, but
 configurations whose randomness or statistics are *matrix-shaped* are
 rejected with a clear error instead of silently mis-aggregating —
-``gaussian`` draws an (m, D) noise tensor, ``min_max`` bisects on the
-pairwise Gram of the selected matrix, ``qsgd`` draws (m, D) quantization
-noise; their values depend on row position in the selected matrix, which
-no longer exists as one array. Order-statistic aggregators (krum /
+``gaussian`` draws an (m, D) noise tensor and ``min_max`` bisects on the
+pairwise Gram of the selected matrix; their values depend on row
+position in the selected matrix, which no longer exists as one array.
+(``qsgd`` used to be in this list, but its rounding noise is now keyed
+per SENDER — ``fold_in(client_id)`` — so it shards exactly; see
+``repro.compress.qsgd``.) Order-statistic aggregators (krum /
 trimmed_mean / median) ARE supported: the (m_total, D) selected matrix is
 re-materialized replicated via a slot-scatter psum (rows land in the
 exact ``sel_idx`` order of the scan engine), which costs one m×D
@@ -64,6 +66,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compress import build_link_policy, ef_step_masked
 from repro.configs.base import FLConfig
 from repro.core import CloudTopology
+from repro.core import features as feats_mod
 from repro.core.cost import round_bytes_jax
 from repro.core.robust import coordinate_median, krum, trimmed_mean
 from repro.core.shapley import gradient_contribution
@@ -90,15 +93,17 @@ AXES = ("cloud", "client")
 
 # attacks whose per-round transform decomposes over client shards: either
 # per-row (sign_flip / scaling / the data-level label_flip) or driven by
-# masked GLOBAL moments that psum cleanly (alie / ipm / collusion).
-# ``gaussian`` (an (m, D) noise tensor) and ``min_max`` (bisection on the
-# selected matrix's pairwise Gram) are matrix-shaped — scan engine only.
+# masked GLOBAL moments that psum/all_gather cleanly (alie / alie_norm /
+# ipm / collusion). ``gaussian`` (an (m, D) noise tensor) and ``min_max``
+# (bisection on the selected matrix's pairwise Gram) are matrix-shaped —
+# scan engine only.
 SHARD_ATTACKS = ("none", "label_flip", "sign_flip", "scaling", "alie",
-                 "ipm", "collusion")
+                 "alie_norm", "ipm", "collusion")
 
-# ``qsgd`` draws (m, D) stochastic-rounding noise — matrix-shaped, same
-# exclusion; ``topk`` is per-row deterministic and shards exactly.
-SHARD_COMPRESSORS = ("none", "topk")
+# ``topk`` is per-row deterministic and ``qsgd`` keys its rounding noise
+# per sender (fold_in(client_id), see repro.compress.qsgd) — both shard
+# exactly.
+SHARD_COMPRESSORS = ("none", "topk", "qsgd")
 
 
 # ---------------------------------------------------------------------------
@@ -121,11 +126,12 @@ def mesh_axes(n_clouds: int, n_clients: int,
 def client_mesh(n_clouds: int, n_clients: int,
                 n_devices: Optional[int] = None) -> Mesh:
     """``("cloud", "client")`` mesh over the visible devices."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
     ax = mesh_axes(n_clouds, n_clients, n_devices)
     if ax is None:
         raise ValueError(
-            f"cannot tile {n_clients} clients over "
-            f"{n_devices or len(jax.devices())} devices")
+            f"cannot tile {n_clients} clients over {n_devices} devices")
     return jax.make_mesh(ax, AXES)
 
 
@@ -160,15 +166,16 @@ def shard_unsupported_reason(flcfg: FLConfig, topo: CloudTopology,
                 "statistics tied to the selected matrix's layout) — use "
                 "the scan engine")
     if flcfg.compressor not in SHARD_COMPRESSORS:
-        return (f"compressor {flcfg.compressor!r} draws matrix-shaped "
-                "quantization noise — use the scan engine")
+        return (f"compressor {flcfg.compressor!r} is not "
+                "shard-decomposable — use the scan engine")
     if not _even_contiguous(topo):
         return ("client→cloud layout is not the even contiguous "
                 "CloudTopology.even map")
+    if n_devices is None:
+        n_devices = len(jax.devices())
     if mesh_axes(topo.n_clouds, topo.n_clients, n_devices) is None:
         return (f"{topo.n_clients} clients do not tile "
-                f"{n_devices if n_devices is not None else len(jax.devices())}"
-                " devices")
+                f"{n_devices} devices")
     return None
 
 
@@ -281,6 +288,19 @@ def _shard_attack(name: str, flat: Array, mal: Array, honest_w: Array,
     if name == "alie":
         mean, std = _masked_moments(flat, honest_w)
         return jnp.where(rm, mean - z * std, flat)
+    if name == "alie_norm":
+        eps = 1e-12
+        mean, std = _masked_moments(flat, honest_w)
+        point = mean - z * std
+        # honest MEDIAN norm via the same all_gather idiom as Eq. 7's
+        # median damp — (N,)-sized, replicated on every shard
+        norms = jnp.linalg.norm(flat, axis=1)
+        all_hn = jax.lax.all_gather(
+            jnp.where(honest_w > 0, norms, jnp.nan), AXES, tiled=True)
+        med = jnp.nanmedian(all_hn)
+        med = jnp.where(jnp.isnan(med) | ~(med > 0), 1.0, med)
+        point = point * (med / jnp.maximum(jnp.linalg.norm(point), eps))
+        return jnp.where(rm, point, flat)
     if name == "ipm":
         mean, _ = _masked_moments(flat, honest_w)
         return jnp.where(rm, -scale * mean, flat)
@@ -395,16 +415,17 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
             ckey = jax.random.fold_in(key, _FOLD_CLIENT_WIRE)
             if hier:       # every client→edge hop is intra-class
                 flat, res_client = ef_step_masked(lp.intra, flat,
-                                                  res_client, valid, ckey)
+                                                  res_client, valid, ckey,
+                                                  gids)
             else:          # flat path: intra or cross by co-location
                 same = jax.lax.dynamic_slice(
                     (cloud_of_j == agg), (i0,), (n_loc,))
                 flat, res_client = ef_step_masked(
                     lp.intra, flat, res_client, valid & same,
-                    jax.random.fold_in(ckey, 0))
+                    jax.random.fold_in(ckey, 0), gids)
                 flat, res_client = ef_step_masked(
                     lp.cross, flat, res_client, valid & ~same,
-                    jax.random.fold_in(ckey, 1))
+                    jax.random.fold_in(ckey, 1), gids)
 
         # everything downstream reads the masked wire view: rows that
         # did not deliver (or were never selected) are exact zeros
@@ -413,6 +434,8 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
 
         res_edge = state.res_edge
         new_rep = state.rep_ema
+        new_feat_sep = state.feat_sep
+        feat_w = jnp.zeros((0,), jnp.float32)
         if hier:
             f32 = flat.dtype
             ref_tree = train_ref(state.params, data.ref_x, data.ref_y, key)
@@ -420,6 +443,7 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
             ref_ll = ref_flat[:, ll_idx]
             cloud_loc = gids // n_k                      # (n_loc,)
             onehot = jax.nn.one_hot(cloud_loc, k, dtype=f32)
+            ref_ll_loc = ref_ll[cloud_loc]
 
             # Eq. 7 with the median-damped norm factor: global gbar and
             # the delivered-norm median from cheap (N,)-sized collectives
@@ -433,6 +457,21 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
             damp = jnp.where(jnp.isnan(damp), 1.0, damp)
             phi = gradient_contribution(ll_loc, gbar) * damp * w
 
+            # multi-feature gate (core.features): features are per-row
+            # (shards own whole rows, gbar/med already globally reduced),
+            # the separability statistics reduce in ONE psum of the
+            # stacked (6, F) sums, and the EMA/weights stay replicated
+            if st.multi_features:
+                feats = feats_mod.client_features(ll_loc, ref_ll_loc,
+                                                  gbar, med, w, eps)
+                sums = _psum(feats_mod.separability_sums(feats, w))
+                sep_round = feats_mod.separability_from_sums(sums, eps)
+                new_feat_sep = (
+                    feats_mod.FEAT_SEP_RHO * state.feat_sep
+                    + (1.0 - feats_mod.FEAT_SEP_RHO) * sep_round)
+                feat_w = feats_mod.feature_weights(new_feat_sep)
+                phi = phi * feats_mod.gate(feats, new_feat_sep)
+
             # Eq. 8–9
             total = _psum(jnp.sum(phi))
             r = jnp.where(total > eps, phi / jnp.maximum(total, eps),
@@ -443,7 +482,6 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
             new_rep = jax.lax.all_gather(rep_new_loc, AXES, tiled=True)
 
             # Eq. 11: trust vs. the client's own cloud reference
-            ref_ll_loc = ref_ll[cloud_loc]
             dots = jnp.sum(ll_loc * ref_ll_loc, axis=1)
             cos = dots / jnp.maximum(
                 norms * jnp.linalg.norm(ref_ll_loc, axis=1), eps)
@@ -535,10 +573,10 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
             res_edge=res_edge, cum_cost=state.cum_cost + cost,
             cum_intra_bytes=state.cum_intra_bytes + intra_b,
             cum_cross_bytes=state.cum_cross_bytes + cross_b,
-            seed=state.seed)
+            feat_sep=new_feat_sep, seed=state.seed)
         out = RoundOut(delivered=delivered, rep=new_rep, cost=cost,
                        intra_bytes=intra_b, cross_bytes=cross_b,
-                       params_l2=tree_l2(params))
+                       params_l2=tree_l2(params), feat_weights=feat_w)
         return new_state, out
 
     # --- specs: the client axis of data/residuals is sharded over the
@@ -547,13 +585,14 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
     state_specs = RoundState(
         params=jax.tree.map(lambda _: P(), template),
         rep_ema=P(), res_client=sharded_res_client, res_edge=P(),
-        cum_cost=P(), cum_intra_bytes=P(), cum_cross_bytes=P(), seed=P())
+        cum_cost=P(), cum_intra_bytes=P(), cum_cross_bytes=P(),
+        feat_sep=P(), seed=P())
     data_specs = ClientData(client_x=P(AXES), client_y=P(AXES),
                             ref_x=P(), ref_y=P(), malicious=P(AXES))
     out_specs = (state_specs,
                  RoundOut(delivered=P(), rep=P(), cost=P(),
                           intra_bytes=P(), cross_bytes=P(),
-                          params_l2=P()))
+                          params_l2=P(), feat_weights=P()))
 
     def _program(state, data, ts):
         def body(c, t):
@@ -604,6 +643,8 @@ def compiled_sharded(shard_static: ShardStatic) -> CompiledShard:
                                            NamedSharding(mesh, P())),
             cum_cross_bytes=jax.device_put(state.cum_cross_bytes,
                                            NamedSharding(mesh, P())),
+            feat_sep=jax.device_put(state.feat_sep,
+                                    NamedSharding(mesh, P())),
             seed=jax.device_put(state.seed, NamedSharding(mesh, P())))
 
     def run(state: RoundState, data: ClientData, rounds: int):

@@ -78,7 +78,8 @@ def _engine_context(telemetry: Any, *, engine_name: str, eng, flcfg: FLConfig,
         c_intra=st.c_intra, c_cross=st.c_cross,
         price_multipliers=st.price_multipliers,
         malice_warmup=st.malice_warmup,
-        scenario=scenario.name if scenario is not None else None)
+        scenario=scenario.name if scenario is not None else None,
+        trust_features=flcfg.trust_features)
     ctx.run_start(rounds=rounds,
                   config={f.name: getattr(flcfg, f.name)
                           for f in fields(flcfg)})
@@ -86,12 +87,15 @@ def _engine_context(telemetry: Any, *, engine_name: str, eng, flcfg: FLConfig,
 
 
 def _replay_rounds(ctx: RunContext, delivered: np.ndarray,
-                   reps: np.ndarray, params_l2: np.ndarray) -> None:
+                   reps: np.ndarray, params_l2: np.ndarray,
+                   feat_weights: Optional[np.ndarray] = None) -> None:
     """Emit round events from stacked (T, ...) RoundOut arrays — the
     post-run path for drivers that cannot stream (vmapped batches, the
     sharded engine whose per-shard callbacks would duplicate events)."""
     for t in range(len(delivered)):
-        ctx.round(t, delivered[t], reps[t], float(params_l2[t]))
+        ctx.round(t, delivered[t], reps[t], float(params_l2[t]),
+                  feat_weights=(feat_weights[t] if feat_weights is not None
+                                else None))
 
 
 def run_simulation(flcfg: FLConfig, *, method: Optional[str] = None,
@@ -221,7 +225,7 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
     stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
     t0 = time.perf_counter()
     if rounds == 0:
-        finals, delivered, reps, pl2 = states, None, None, None
+        finals, delivered, reps, pl2, fw = states, None, None, None, None
     elif len(seeds) == 1:
         # unbatched scan: bit-identical to the per-round engine driver
         if ctxs is not None:
@@ -232,7 +236,10 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
             tapped = engine_mod.compiled(static, TapSpec(enabled=True))
             collect = lambda t, out: ctx.round(
                 int(t), np.asarray(out.delivered), np.asarray(out.rep),
-                float(out.params_l2))
+                float(out.params_l2),
+                feat_weights=(np.asarray(out.feat_weights)
+                              if np.asarray(out.feat_weights).size
+                              else None))
             with taps_mod.collecting(collect):
                 fin, outs = tapped.run(states[0], dev[0], rounds)
                 jax.block_until_ready(outs.delivered)
@@ -243,6 +250,7 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
         delivered = np.asarray(outs.delivered)[None]       # (1, T, N)
         reps = np.asarray(outs.rep)[None]
         pl2 = np.asarray(outs.params_l2)[None]
+        fw = np.asarray(outs.feat_weights)[None]           # (1, T, F|0)
     elif data is not None:
         # one dataset shared across seeds: broadcast the sample arrays
         # (one device copy) and stack only the per-seed leaves (poisoned
@@ -259,6 +267,7 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
         delivered = np.asarray(outs.delivered)             # (S, T, N)
         reps = np.asarray(outs.rep)
         pl2 = np.asarray(outs.params_l2)
+        fw = np.asarray(outs.feat_weights)                 # (S, T, F|0)
     else:
         fin, outs = eng.run_batch(jax.tree.map(stack, *states),
                                   jax.tree.map(stack, *dev), rounds)
@@ -267,6 +276,7 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
         delivered = np.asarray(outs.delivered)             # (S, T, N)
         reps = np.asarray(outs.rep)
         pl2 = np.asarray(outs.params_l2)
+        fw = np.asarray(outs.feat_weights)                 # (S, T, F|0)
     if ctxs is not None:
         dt = time.perf_counter() - t0
         for ctx in ctxs:
@@ -293,7 +303,9 @@ def run_simulation_batch(flcfg: FLConfig, *, seeds: Sequence[int],
         if ctxs is not None:
             ctx = ctxs[i]
             if rounds > 0 and not streamed:
-                _replay_rounds(ctx, delivered[i], reps[i], pl2[i])
+                _replay_rounds(ctx, delivered[i], reps[i], pl2[i],
+                               fw[i] if fw is not None and fw.shape[-1]
+                               else None)
             if acc:
                 ctx.eval(rounds - 1, float(acc[0]))
             ctx.run_end()
@@ -369,8 +381,10 @@ def run_simulation_sharded(flcfg: FLConfig, *,
         # stacked RoundOut instead (digests match scan to ~1e-4)
         ctx.span("engine.run", time.perf_counter() - t0,
                  phase="compile+execute")
+        sh_fw = np.asarray(outs.feat_weights)
         _replay_rounds(ctx, np.asarray(outs.delivered),
-                       np.asarray(outs.rep), np.asarray(outs.params_l2))
+                       np.asarray(outs.rep), np.asarray(outs.params_l2),
+                       sh_fw if sh_fw.shape[-1] else None)
         ctx.eval(rounds - 1, float(acc))
         ctx.run_end()
     # byte-exact float64 accounting from the delivered masks — the same

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.linear_scan import linear_scan as _linear_scan
 from repro.kernels.quantize import stochastic_quantize as _stochastic_quantize
 from repro.kernels.topk_mask import topk_mask as _topk_mask
+from repro.kernels.trust_features import trust_features as _trust_features
 from repro.kernels.trust_score import trust_score as _trust_score
 from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
 
@@ -27,6 +28,15 @@ def trust_score(grads: Array, ref: Array, reputation: Array, *,
     """Fused Eq. 7 + Eq. 11 statistics: (phi, ts, norms) over (N, D)."""
     return _trust_score(grads, ref, reputation, block_n=block_n,
                         block_d=block_d, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def trust_features(grads: Array, refs: Array, gbar: Array, med: Array,
+                   w: Array, *, block_n: int = 8, block_d: int = 512,
+                   interpret: bool = True) -> Array:
+    """Fused multi-feature trust pass: (M, D) -> (M, N_FEATURES)."""
+    return _trust_features(grads, refs, gbar, med, w, block_n=block_n,
+                           block_d=block_d, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("block_d", "interpret"))

@@ -32,6 +32,16 @@ def trust_score_ref(grads: Array, ref: Array, reputation: Array,
     return phi, ts, norms
 
 
+def trust_features_ref(grads: Array, refs: Array, gbar: Array, med: Array,
+                       w: Array, eps: float = 1e-12) -> Array:
+    """Fused multi-feature trust pass over (M, D): per-row norm profile
+    vs the median, ReLU cosine to the per-row reference, sign agreement
+    with the aggregate, and the loss-delta proxy — the canonical math
+    lives in ``repro.core.features.client_features``."""
+    from repro.core.features import client_features
+    return client_features(grads, refs, gbar, med, w, eps)
+
+
 def weighted_agg_ref(grads: Array, ts: Array, norms: Array, ref_norm: Array,
                      eps: float = 1e-12) -> Array:
     """Fused Eq. 12 + Eq. 13: out = Σ_i TS_i·(‖g_ref‖/‖g_i‖)·g_i / Σ_i TS_i."""

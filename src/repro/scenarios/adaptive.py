@@ -4,13 +4,34 @@ from ``repro.core.attacks.UPDATE_ATTACKS`` — the transforms themselves
 live there as jittable (N, D) functions."""
 from __future__ import annotations
 
-from repro.scenarios.base import Scenario, register_scenario
+from repro.scenarios.base import JitHooks, Scenario, register_scenario
+from repro.scenarios.environment import make_intermittent_hook
 
 ALIE = register_scenario(Scenario(
     name="alie", level="adaptive",
     description="a-little-is-enough: hide at mean − z·std of honest rows",
     overrides=dict(attack="alie", malicious_frac=0.3, attack_z=1.0),
     knobs=dict(z=1.0),
+))
+
+# reputation-aware ALIE variants: both target the trust evaluator
+# itself rather than the aggregate, stressing the multi-feature path
+# (scalar Eq. 7 is norm-dominated; these hide in the norm profile).
+ALIE_NORM = register_scenario(Scenario(
+    name="alie_norm", level="adaptive",
+    description="ALIE point rescaled to the honest median norm, so the "
+                "Eq. 7 norm damp reads attackers as typical",
+    overrides=dict(attack="alie_norm", malicious_frac=0.3, attack_z=1.0),
+    knobs=dict(z=1.0),
+))
+
+ALIE_SLEEPER = register_scenario(Scenario(
+    name="alie_sleeper", level="adaptive",
+    description="honest for 2 rounds to farm reputation, then ALIE",
+    overrides=dict(attack="alie", malicious_frac=0.3, attack_z=1.0),
+    knobs=dict(warmup=2, z=1.0),
+    malicious_now=make_intermittent_hook(2),
+    jit_hooks=JitHooks(malice_warmup=2),
 ))
 
 IPM = register_scenario(Scenario(
@@ -35,4 +56,5 @@ COLLUSION = register_scenario(Scenario(
     knobs=dict(scale=1.0),
 ))
 
-ADAPTIVE_SCENARIOS = (ALIE, IPM, MIN_MAX, COLLUSION)
+ADAPTIVE_SCENARIOS = (ALIE, ALIE_NORM, ALIE_SLEEPER, IPM, MIN_MAX,
+                      COLLUSION)

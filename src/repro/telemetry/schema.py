@@ -27,6 +27,13 @@ tamper-evident round ledger, and an always-on cross-engine diff.
 
 Validation is hand-rolled (:func:`validate_event`) — no jsonschema
 dependency; CI runs it over the fast job's JSONL artifact.
+
+v1.1 adds the multi-feature trust fields to ``round`` events:
+``trust_features`` (the ``FLConfig.trust_features`` mode, or null) and
+``feat_weights`` (the softmax-normalized adaptive feature weights after
+this round's EMA update, or null on scalar runs). Both are nullable, so
+scalar runs emit the same field *values* across engines and the
+byte-parity contract is untouched.
 """
 from __future__ import annotations
 
@@ -39,7 +46,7 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.fl_types import CloudTopology
 
-SCHEMA = "cost-trustfl/telemetry/v1"
+SCHEMA = "cost-trustfl/telemetry/v1.1"
 
 EVENT_TYPES = ("run_start", "round", "eval", "span", "run_end")
 
@@ -78,6 +85,9 @@ _NULLABLE: Dict[str, tuple] = {
     "scenario": (str,), "rep_honest_mean": _NUM, "rep_malicious_mean": _NUM,
     "loss": _NUM, "rounds": (int,), "config": (dict,), "provenance": (dict,),
     "run_id": (str,), "engine": (str,), "phase": (str,), "t": (int,),
+    # v1.1: multi-feature trust path (null on scalar runs, so v1 streams
+    # and scalar v1.1 streams stay byte-compatible field-for-field)
+    "trust_features": (str,), "feat_weights": (list,),
 }
 
 
@@ -111,6 +121,10 @@ def validate_event(ev: Any) -> List[str]:
             continue
         if not isinstance(ev[name], types) or isinstance(ev[name], bool):
             errs.append(f"{kind}.{name}: {ev[name]!r} is not {types}")
+    if isinstance(ev.get("feat_weights"), list):
+        for i, w in enumerate(ev["feat_weights"]):
+            if not isinstance(w, _NUM) or isinstance(w, bool):
+                errs.append(f"{kind}.feat_weights[{i}]: {w!r} is not {_NUM}")
     return errs
 
 
@@ -161,13 +175,15 @@ class RunContext:
                  c_intra: float = 0.01, c_cross: float = 0.09,
                  price_multipliers: Sequence[float] = (1.0,),
                  malice_warmup: int = 0,
-                 scenario: Optional[str] = None):
+                 scenario: Optional[str] = None,
+                 trust_features: Optional[str] = None):
         self.telemetry = telemetry
         self.engine = engine
         self.run_id = run_id
         self.method = method
         self.attack = attack
         self.scenario = scenario
+        self.trust_features = trust_features
         self.seed = int(seed)
         self.topo = topo
         self.d_params = int(d_params)
@@ -229,7 +245,8 @@ class RunContext:
               params_l2: float, *, cost: Optional[float] = None,
               intra_bytes: Optional[float] = None,
               cross_bytes: Optional[float] = None,
-              price_mult: Optional[float] = None) -> Dict[str, Any]:
+              price_mult: Optional[float] = None,
+              feat_weights: Optional[np.ndarray] = None) -> Dict[str, Any]:
         """Build + emit one ``round`` event from the raw round outputs.
 
         ``delivered``/``rep`` are the (N,) mask and post-update
@@ -281,6 +298,9 @@ class RunContext:
                              else None),
             rep_malicious_mean=(float(rep64[self.malicious].mean())
                                 if self.malicious.any() else None),
+            trust_features=self.trust_features,
+            feat_weights=(None if feat_weights is None
+                          else [float(w) for w in np.asarray(feat_weights)]),
             digest={"params_l2": float(params_l2),
                     "rep_l2": float(np.linalg.norm(rep64)),
                     "rep_sum": float(rep64.sum()),

@@ -9,7 +9,7 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.compare import compare  # noqa: E402
+from benchmarks.compare import compare, main  # noqa: E402
 
 
 BASE = {
@@ -52,3 +52,39 @@ def test_threshold_is_respected():
     cur = dict(BASE, host_rounds_per_s=7.4)      # -26%
     assert compare(cur, BASE, threshold=0.25) != []
     assert compare(cur, BASE, threshold=0.30) == []
+
+
+# -- missing / malformed baseline handling (the CLI layer) --------------------
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_missing_baseline_skips_with_warning(tmp_path, capsys):
+    """A bench whose baseline is not committed yet must WARN and pass
+    (exit 0), not hard-fail every CI run until the baseline lands."""
+    cur = _write(tmp_path, "cur.json", '{"scan_rounds_per_s": 1.0}')
+    missing = str(tmp_path / "nope.json")
+    assert main(["--current", cur, "--baseline", missing]) == 0
+    err = capsys.readouterr().err
+    assert "WARNING" in err and "nope.json" in err
+
+
+def test_malformed_baseline_fails_loudly(tmp_path):
+    """A baseline that EXISTS but does not parse is corruption, not a
+    coverage gap — it must never read as a pass."""
+    cur = _write(tmp_path, "cur.json", '{"scan_rounds_per_s": 1.0}')
+    bad = _write(tmp_path, "base.json", "{not json")
+    with pytest.raises(Exception):
+        main(["--current", cur, "--baseline", bad])
+
+
+def test_missing_current_still_fails(tmp_path):
+    """The skip is for absent BASELINES only: a missing current-run
+    artifact means the bench itself did not run."""
+    base = _write(tmp_path, "base.json", '{"scan_rounds_per_s": 1.0}')
+    with pytest.raises(FileNotFoundError):
+        main(["--current", str(tmp_path / "absent.json"),
+              "--baseline", base])

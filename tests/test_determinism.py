@@ -231,9 +231,10 @@ def test_legacy_host_loop_is_deterministic(method, compressor):
 #
 # The space deliberately excludes host-RNG scenarios (dropout draws
 # delivery from numpy on the host path — replaying selection is not
-# enough) and matrix-shaped randomness (gaussian / min_max / qsgd),
-# which the sharded engine refuses by design; those exclusions are the
-# routing tests' responsibility.
+# enough) and matrix-shaped randomness (gaussian / min_max), which the
+# sharded engine refuses by design; those exclusions are the routing
+# tests' responsibility. qsgd is IN the pool: its rounding noise is
+# keyed per sender (fold_in(client_id)), so it is engine-invariant.
 
 _FUZZ_BASE = dict(n_clouds=3, clients_per_cloud=4, local_epochs=1,
                   local_batch=8, ref_samples=16, attack="sign_flip",
@@ -254,16 +255,21 @@ def _fuzz_data():
     return _fuzz_data_cache["d"]
 
 
-@settings(max_examples=6, deadline=None, derandomize=True)
+@settings(max_examples=8, deadline=None, derandomize=True)
 @given(method=st.sampled_from(_METHODS),
-       compressor=st.sampled_from(("none", "topk")),
-       scenario=st.sampled_from((None, "price_surge", "alie")),
+       compressor=st.sampled_from(("none", "topk", "qsgd")),
+       scenario=st.sampled_from((None, "price_surge", "alie", "alie_norm",
+                                 "alie_sleeper")),
+       trust_features=st.sampled_from(("scalar", "multi")),
        clients_per_round=st.sampled_from((4, 6)))
 def test_cross_engine_parity_fuzz(method, compressor, scenario,
-                                  clients_per_round):
+                                  trust_features, clients_per_round):
+    if trust_features == "multi" and method != "cost_trustfl":
+        trust_features = "scalar"     # the gate only exists on Eq. 7
     fl = FLConfig(clients_per_round=clients_per_round,
                   compressor=compressor, compress_ratio=0.25,
-                  link_policy="cross_only", **_FUZZ_BASE)
+                  link_policy="cross_only", trust_features=trust_features,
+                  **_FUZZ_BASE)
     sc = get_scenario(scenario) if scenario else None
     if sc is not None:
         fl = sc.apply(fl)

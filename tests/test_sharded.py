@@ -50,17 +50,26 @@ def test_mesh_axes_factorization():
 @pytest.mark.parametrize("over,frag", [
     (dict(attack="gaussian"), "matrix-shaped"),
     (dict(attack="min_max"), "matrix-shaped"),
-    (dict(compressor="qsgd", link_policy="all"), "quantization noise"),
 ])
 def test_shard_rejects_matrix_shaped_configs(over, frag):
-    """Attacks/codecs whose randomness or statistics are tied to the
-    selected matrix's layout must be refused loudly."""
+    """Attacks whose randomness or statistics are tied to the selected
+    matrix's layout must be refused loudly."""
     fl = _fl(**over)
     topo = make_topology(fl)
     reason = sharded_mod.shard_unsupported_reason(fl, topo, "cost_trustfl")
     assert reason is not None and frag in reason
     with pytest.raises(ValueError, match=frag):
         engine_mod.resolve_engine("shard", fl, topo, "cost_trustfl")
+
+
+def test_shard_accepts_qsgd():
+    """qsgd keys its rounding noise per SENDER (fold_in(client_id)), so
+    the noise stream no longer depends on the matrix layout and the
+    sharded engine runs it — the old refusal is gone."""
+    fl = _fl(compressor="qsgd", compress_ratio=0.25, link_policy="all")
+    topo = make_topology(fl)
+    assert sharded_mod.shard_unsupported_reason(fl, topo,
+                                                "cost_trustfl") is None
 
 
 @pytest.mark.parametrize("method", ["krum", "trimmed_mean", "median"])
@@ -98,7 +107,23 @@ def test_shard_rejects_untileable_population():
     topo = make_topology(fl)
     reason = sharded_mod.shard_unsupported_reason(fl, topo, "cost_trustfl",
                                                   n_devices=5)
-    assert reason is not None and "tile" in reason
+    # the message must report the ACTUAL device count it was asked to
+    # tile, not whatever len(jax.devices()) happens to be
+    assert reason is not None and "tile" in reason and "5 devices" in reason
+
+
+def test_auto_routes_uneven_topology_to_scan():
+    """engine="auto" with a non-even client→cloud map silently falls
+    back to the scan engine (a refusal is only for FORCED shard)."""
+    fl = _fl()
+    topo = CloudTopology(cloud_of=np.array([0] * 7 + [1] * 5), n_clouds=2,
+                         aggregator_cloud=0)
+    for n_dev in (1, 2, 4):
+        assert engine_mod.resolve_engine("auto", fl, topo, "cost_trustfl",
+                                         n_devices=n_dev) == "jit"
+    with pytest.raises(ValueError, match="contiguous"):
+        engine_mod.resolve_engine("shard", fl, topo, "cost_trustfl",
+                                  n_devices=4)
 
 
 def test_resolve_engine_routing():
@@ -183,11 +208,14 @@ def test_sharded_matches_scan_engine(method, shared_data):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("compressor", ["topk", "qsgd"])
 @pytest.mark.parametrize("link_policy", ["cross_only", "all"])
-def test_sharded_matches_scan_engine_compressed(link_policy, shared_data):
-    """top-k EF residuals live sharded with their clients and replay the
-    scan engine's state bookkeeping."""
-    fl = _fl(compressor="topk", compress_ratio=0.25,
+def test_sharded_matches_scan_engine_compressed(compressor, link_policy,
+                                                shared_data):
+    """EF residuals live sharded with their clients and replay the scan
+    engine's state bookkeeping; qsgd's per-sender rounding noise
+    (fold_in(client_id)) is engine-invariant, so it holds parity too."""
+    fl = _fl(compressor=compressor, compress_ratio=0.25,
              link_policy=link_policy)
     _assert_parity(*_pair(fl, "cost_trustfl", shared_data))
 
@@ -203,11 +231,21 @@ def test_sharded_matches_scan_engine_scenarios(scenario, shared_data):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("attack", ["scaling", "alie", "ipm", "collusion"])
+@pytest.mark.parametrize("attack", ["scaling", "alie", "alie_norm", "ipm",
+                                    "collusion"])
 def test_sharded_matches_scan_engine_attacks(attack, shared_data):
     """Shard-decomposable adversaries: per-row transforms and masked
     global-moment attacks see the same row set as the scan engine."""
     _assert_parity(*_pair(_fl(attack=attack), "cost_trustfl", shared_data))
+
+
+@pytest.mark.slow
+def test_sharded_matches_scan_engine_multi_features(shared_data):
+    """trust_features="multi": the feature pass and the separability-EMA
+    gate decompose into per-shard sums + one psum — reputation must
+    track the scan engine within the documented tolerance."""
+    fl = _fl(trust_features="multi")
+    _assert_parity(*_pair(fl, "cost_trustfl", shared_data))
 
 
 @pytest.mark.slow

@@ -234,6 +234,40 @@ def test_validator_accepts_good_and_rejects_bad_events():
     assert errs and errs[0].startswith("#1:")
 
 
+def test_validator_covers_v11_feature_fields():
+    """v1.1: ``trust_features`` / ``feat_weights`` are nullable round
+    fields — absent, null, or well-typed all pass; wrong types fail."""
+    assert validate_event(_round_event(trust_features=None,
+                                       feat_weights=None)) == []
+    assert validate_event(_round_event(trust_features="multi",
+                                       feat_weights=[0.25] * 4)) == []
+    assert validate_event(_round_event(trust_features=7))     # not a str
+    assert validate_event(_round_event(feat_weights="0.25"))  # not a list
+    assert validate_event(_round_event(feat_weights=[0.5, True]))
+    assert validate_event(_round_event(feat_weights=[0.5, "x"]))
+
+
+def test_round_events_carry_feature_weights_on_multi_runs():
+    """trust_features="multi" streams the per-round softmax mixing
+    weights; the scalar path emits nulls — same schema either way."""
+    fl, data = _parity_setup()
+    ev_multi = _events(lambda tel: run_simulation_batch(
+        FLConfig(**_FL, trust_features="multi"), seeds=[0], rounds=3,
+        data=data, telemetry=tel))
+    ev_scalar = _events(lambda tel: run_simulation_batch(
+        fl, seeds=[0], rounds=3, data=data, telemetry=tel))
+    assert validate_events(ev_multi) == []
+    for e in _rounds(ev_multi):
+        assert e["trust_features"] == "multi"
+        w = e["feat_weights"]
+        assert isinstance(w, list) and len(w) == 4
+        assert all(isinstance(x, float) for x in w)
+        assert sum(w) == pytest.approx(1.0, abs=1e-5)
+    for e in _rounds(ev_scalar):
+        assert e["trust_features"] == "scalar"
+        assert e["feat_weights"] is None
+
+
 def test_ring_buffer_is_bounded():
     sink = RingBufferSink(capacity=3)
     for i in range(10):

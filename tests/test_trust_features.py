@@ -1,0 +1,221 @@
+"""Multi-feature trust scoring (repro.core.features) and its fused
+Pallas pass (repro.kernels.trust_features).
+
+Three layers of guarantee:
+
+* kernel ≡ oracle — the one-pass Pallas feature kernel matches the
+  pure-jnp oracle the engines trace, over a hypothesis sweep plus the
+  degenerate shapes (single row, empty selection, NaN median);
+* gate semantics — with zero separability evidence the gate is exactly
+  1 (multi degrades to the scalar Eq. 7 path instead of injecting
+  noise), anti-correlated (captured) features earn zero weight, and the
+  gate is monotone in the feature scores;
+* the AUC gate — on every registry scenario with active malice, the
+  multi path's honest-vs-malicious reputation AUC is at least the
+  scalar path's. This is the CI contract for the feature: adaptive
+  weighting may only ever help.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.configs.base import FLConfig
+from repro.core import features as F
+from repro.federated import make_data, run_simulation_batch
+from repro.kernels import ops, ref
+from repro.scenarios import get_scenario, list_scenarios
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _case(m, d, seed, mask_frac=0.3, norm_spread=True):
+    rng = np.random.default_rng(seed)
+    scale = rng.choice([0.01, 1.0, 50.0], size=(m, 1)) if norm_spread else 1.0
+    g = (rng.normal(size=(m, d)) * scale).astype(np.float32)
+    r = rng.normal(size=(m, d)).astype(np.float32)
+    w = (rng.random(m) >= mask_frac).astype(np.float32)
+    gbar = (w @ g) / max(w.sum(), 1.0)
+    norms = np.linalg.norm(g, axis=1)
+    med = (np.nanmedian(np.where(w > 0, norms, np.nan)) if w.sum()
+           else np.float32("nan"))
+    return (jnp.asarray(g), jnp.asarray(r), jnp.asarray(gbar),
+            jnp.asarray(np.float32(med)), jnp.asarray(w))
+
+
+# -- kernel vs jnp oracle -----------------------------------------------------
+
+@given(m=st.integers(1, 18), d=st.integers(1, 640), seed=st.integers(0, 5))
+def test_kernel_matches_oracle(m, d, seed):
+    args = _case(m, d, seed)
+    kern = ops.trust_features(*args)
+    orac = ref.trust_features_ref(*args)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(orac),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_single_row():
+    args = _case(1, 37, seed=7, mask_frac=0.0)
+    np.testing.assert_allclose(np.asarray(ops.trust_features(*args)),
+                               np.asarray(ref.trust_features_ref(*args)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_all_masked_selection():
+    """Empty selection ⇒ NaN median; both sides sanitize it to 1 and
+    zero out every (undelivered) row — no NaNs may escape."""
+    args = _case(6, 50, seed=3, mask_frac=1.1)
+    kern = np.asarray(ops.trust_features(*args))
+    orac = np.asarray(ref.trust_features_ref(*args))
+    assert np.all(np.isfinite(kern)) and np.array_equal(kern, np.zeros_like(kern))
+    np.testing.assert_allclose(kern, orac, rtol=1e-5, atol=1e-5)
+
+
+def test_features_bounded_and_masked():
+    g, r, gbar, med, w = _case(12, 100, seed=1)
+    feats = np.asarray(F.client_features(g, r, gbar, med, w))
+    assert feats.shape == (12, F.N_FEATURES)
+    assert np.all(feats >= 0.0) and np.all(feats <= 1.0)
+    assert np.array_equal(feats[np.asarray(w) == 0], 0.0 * feats[np.asarray(w) == 0])
+
+
+def test_loss_delta_is_symmetric_in_norm():
+    """f3's norm factor must decay for inflated AND vanishing updates —
+    a one-sided clip hands every norm-inflator the maximal factor."""
+    d = 64
+    direction = np.ones((1, d), np.float32) / np.sqrt(d)
+    g = jnp.asarray(np.concatenate([10.0 * direction, direction,
+                                    0.1 * direction]))
+    r = jnp.asarray(np.repeat(direction, 3, axis=0))
+    w = jnp.ones(3)
+    feats = np.asarray(F.client_features(g, r, g[1], jnp.asarray(1.0), w))
+    f3 = feats[:, 3]
+    assert f3[1] > f3[0] and f3[1] > f3[2]
+    np.testing.assert_allclose(f3[0], f3[2], rtol=1e-5)
+
+
+# -- gate semantics -----------------------------------------------------------
+
+def test_gate_is_identity_without_evidence():
+    """Zero separability EMA ⇒ β = 0 ⇒ gate ≡ 1: phi_multi degrades to
+    the scalar path exactly."""
+    feats = jnp.asarray(np.random.default_rng(0).random((9, F.N_FEATURES)),
+                        jnp.float32)
+    gate = np.asarray(F.gate(feats, jnp.zeros(F.N_FEATURES)))
+    np.testing.assert_allclose(gate, np.ones(9), rtol=0, atol=1e-7)
+
+
+def test_gate_strength_needs_norm_modality():
+    """β derives ONLY from the norm profile's separability — direction
+    features corroborating the direction anchor is not independent
+    evidence (a pure-scaling adversary preserves direction exactly)."""
+    sep = np.zeros(F.N_FEATURES, np.float32)
+    sep[1] = sep[2] = sep[3] = 1.0          # direction features maxed
+    assert float(F.gate_strength(jnp.asarray(sep))) == 0.0
+    sep[F.CONSENSUS_FEATURE] = 1.0
+    assert float(F.gate_strength(jnp.asarray(sep))) == pytest.approx(F.BETA_MAX)
+
+
+def test_gate_monotone_in_features():
+    """With evidence, a row scoring higher on every feature gets a
+    gate at least as large — the gate can demote, never invert."""
+    sep = jnp.full((F.N_FEATURES,), 0.8)
+    lo = jnp.asarray([[0.1, 0.1, 0.1, 0.1]], jnp.float32)
+    hi = jnp.asarray([[0.9, 0.9, 0.9, 0.9]], jnp.float32)
+    assert float(F.gate(hi, sep)[0]) > float(F.gate(lo, sep)[0])
+    assert float(F.gate(lo, sep)[0]) >= 1.0 - F.BETA_MAX - 1e-6
+
+
+def test_captured_feature_earns_zero_weight():
+    """A feature ANTI-correlated with the reference anchor (the
+    signature of a captured signal) must get separability 0, not
+    |corr| — this is what makes the weighting adversarially safe."""
+    m = 32
+    rng = np.random.default_rng(4)
+    anchor = rng.random(m).astype(np.float32)
+    feats = np.zeros((m, F.N_FEATURES), np.float32)
+    feats[:, F.ANCHOR_FEATURE] = anchor
+    feats[:, 0] = 1.0 - anchor              # perfectly anti-correlated
+    feats[:, 2] = anchor                    # perfectly correlated
+    feats[:, 3] = rng.random(m)             # noise
+    sep = np.asarray(F.separability(jnp.asarray(feats), jnp.ones(m)))
+    assert sep[0] == 0.0
+    assert sep[2] == pytest.approx(1.0, abs=1e-5)
+    assert sep[F.ANCHOR_FEATURE] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_separability_sums_decompose():
+    """The (6, F) sufficient statistics add across row shards — the
+    exactness the sharded engine's single psum relies on."""
+    g, r, gbar, med, w = _case(10, 80, seed=2)
+    feats = F.client_features(g, r, gbar, med, w)
+    whole = F.separability_sums(feats, w)
+    parts = (F.separability_sums(feats[:4], w[:4]) +
+             F.separability_sums(feats[4:], w[4:]))
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(parts),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(F.separability_from_sums(parts)),
+        np.asarray(F.separability(feats, w)), rtol=1e-5, atol=1e-5)
+
+
+def test_feature_weights_uniform_at_zero():
+    w = np.asarray(F.feature_weights(jnp.zeros(F.N_FEATURES)))
+    np.testing.assert_allclose(w, np.full(F.N_FEATURES, 1.0 / F.N_FEATURES),
+                               rtol=1e-6)
+
+
+# -- the CI AUC gate: multi ≥ scalar on every scenario ------------------------
+
+_GATE_FL = dict(n_clouds=3, clients_per_cloud=4, clients_per_round=6,
+                local_epochs=1, local_batch=8, ref_samples=16)
+_GATE_ROUNDS = 4
+_gate_cache = {}
+
+
+def _malice_scenarios():
+    out = []
+    for name in sorted(list_scenarios()):
+        ov = get_scenario(name).overrides
+        if ov.get("attack", "none") != "none" and ov.get("malicious_frac", 0):
+            out.append(name)
+    return out
+
+
+def _auc(rep, mal):
+    h, m = rep[~mal], rep[mal]
+    diff = h[:, None] - m[None, :]
+    return float((diff > 0).mean() + 0.5 * (diff == 0).mean())
+
+
+def _gate_auc(scenario_name, trust_features):
+    key = (scenario_name, trust_features)
+    if key not in _gate_cache:
+        if "data" not in _gate_cache:
+            _gate_cache["data"] = make_data(
+                FLConfig(**_GATE_FL), "cifar10", seed=0, n_samples=600,
+                samples_per_client=16)
+        fl = FLConfig(**_GATE_FL, trust_features=trust_features)
+        r = run_simulation_batch(fl, seeds=[0], method="cost_trustfl",
+                                 rounds=_GATE_ROUNDS,
+                                 data=_gate_cache["data"],
+                                 scenario=get_scenario(scenario_name))[0]
+        _gate_cache[key] = _auc(np.asarray(r.reputation),
+                                np.asarray(r.malicious))
+    return _gate_cache[key]
+
+
+@pytest.mark.parametrize("scenario", _malice_scenarios())
+def test_multi_auc_at_least_scalar(scenario):
+    """The adaptive multi-feature gate may never rank honest clients
+    below attackers where the scalar Eq. 7 path did not: its confidence
+    β scales with accumulated two-modality evidence and is capped, so
+    with weak evidence it degrades to the scalar ranking. Exact
+    equality is common at this budget — the contract is ≥, on EVERY
+    scenario with active malice."""
+    scalar = _gate_auc(scenario, "scalar")
+    multi = _gate_auc(scenario, "multi")
+    assert multi >= scalar - 1e-9, (
+        f"{scenario}: multi AUC {multi:.4f} < scalar AUC {scalar:.4f}")
